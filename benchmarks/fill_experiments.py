@@ -1,0 +1,41 @@
+"""Fill EXPERIMENTS.md's <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE -->
+markers from results/dryrun_baseline.jsonl (idempotent)."""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+from roofline import load, markdown, fraction  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main(argv=None):
+    rows = load()
+    if not rows:
+        print("fill_experiments,0,no results")
+        return
+    md = markdown(rows)
+    dry, roof = md.split("### §Roofline")
+    roof = "### §Roofline" + roof
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = re.sub(
+        r"<!-- DRYRUN_TABLE -->.*?(?=\n## §Roofline)",
+        "<!-- DRYRUN_TABLE -->\n" + dry.split("### §Dry-run — ")[1].split("\n", 1)[1].strip() + "\n",
+        text,
+        flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n## §Perf)",
+        "<!-- ROOFLINE_TABLE -->\n" + roof.split("\n", 2)[2].strip() + "\n",
+        text,
+        flags=re.S,
+    )
+    open(path, "w").write(text)
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"fill_experiments,{len(ok)},tables written")
+
+
+if __name__ == "__main__":
+    main()

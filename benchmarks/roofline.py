@@ -1,0 +1,102 @@
+"""Roofline report generator: reads the dry-run JSONL and emits the
+EXPERIMENTS.md §Dry-run + §Roofline tables (markdown) and CSV lines.
+
+Terms (per §Roofline of the brief, TPU v5e constants):
+    compute_s    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory_s     = HLO_bytes / HBM_bw               (per chip)
+    collective_s = collective_bytes / (links * bw)  (per chip)
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference) and the
+useful-flops ratio MODEL_FLOPS / HLO_FLOPs.  The "roofline fraction"
+column is (MODEL_FLOPS / peak) / max(term) — the share of the bound time
+doing useful model math (the §Perf score)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_baseline.jsonl")
+
+
+def load(path=BASELINE):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r.get("multi_pod", False))
+        seen[key] = r  # last write wins (reruns supersede)
+    return list(seen.values())
+
+
+def fraction(r) -> float:
+    rt = r["roofline"]
+    useful_s = r["model_flops_per_chip"] / 197e12
+    bound = max(rt["compute_s"], rt["memory_s"], rt["collective_s"])
+    return useful_s / bound if bound > 0 else 0.0
+
+
+def markdown(rows) -> str:
+    out = []
+    out.append("### §Dry-run — per-chip memory + compile status\n")
+    out.append(
+        "| arch | shape | mesh | status | args GB/chip | temp GB/chip | peak GB/chip |"
+    )
+    out.append("|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r.get("multi_pod", False))):
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | {r['status']}: "
+                f"{r.get('reason', r.get('error', ''))[:60]} | — | — | — |"
+            )
+            continue
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+            f"{m['argument_bytes']/1e9:.2f} | {m['temp_bytes']/1e9:.2f} | "
+            f"{m['peak_bytes']/1e9:.2f} |"
+        )
+
+    out.append("\n### §Roofline — per-chip terms (single-pod 16x16 unless noted)\n")
+    out.append(
+        "| arch | shape | compute ms | memory ms | collective ms | dominant | "
+        "useful-flops ratio | roofline fraction |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or r.get("multi_pod"):
+            continue
+        rt = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rt['compute_s']*1e3:.1f} | "
+            f"{rt['memory_s']*1e3:.1f} | {rt['collective_s']*1e3:.1f} | "
+            f"{rt['dominant']} | {r['useful_flops_ratio']:.2f} | {fraction(r):.3f} |"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None):
+    path = argv[0] if argv else BASELINE
+    rows = load(path)
+    if not rows:
+        print("roofline_report,0,no dryrun results yet (run repro.launch.dryrun --all)")
+        return {}
+    md = markdown(rows)
+    out_md = os.path.join(os.path.dirname(path), "roofline.md")
+    with open(out_md, "w") as f:
+        f.write(md + "\n")
+    ok = [r for r in rows if r["status"] == "ok" and not r.get("multi_pod")]
+    for r in sorted(ok, key=fraction):
+        print(
+            f"roofline_{r['arch']}_{r['shape']},"
+            f"{max(r['roofline']['compute_s'], r['roofline']['memory_s'], r['roofline']['collective_s'])*1e6:.0f},"
+            f"dominant={r['roofline']['dominant']} fraction={fraction(r):.3f}"
+        )
+    print(f"roofline_report,{len(ok)},written={out_md}")
+    return {"rows": rows, "markdown": md}
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,43 @@
+"""Benchmark harness — one benchmark per paper table/figure (DESIGN §9).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run csa_vs_nm  # one
+
+Each benchmark prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "csa_vs_nm",  # §2.1: CSA vs NM vs random; Eq.1/Eq.2
+    "rb_gauss_seidel",  # §3: the paper's illustrative example (Fig. 1a/1b)
+    "kernel_autotune",  # §2.3: block-size tuning on Pallas kernels
+    "step_autotune",  # §2.4: exec modes on a real train step
+    "grad_compression",  # DESIGN §7: compressed DP reduction
+    "roofline",  # §Roofline report from the dry-run JSONL
+]
+
+
+def main() -> None:
+    which = sys.argv[1:] or BENCHES
+    failures = []
+    for name in which:
+        print(f"\n=== benchmarks.{name} ===")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main([])
+            print(f"bench_{name}_wall,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"bench_{name}_wall,{(time.time()-t0)*1e6:.0f},FAILED:{e!r}")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

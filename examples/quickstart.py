@@ -1,0 +1,42 @@
+"""PATSMA quickstart: the paper's API in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Autotuning, CSA, LogIntDim, SearchSpace
+
+# ---- 1. plain staged optimization (paper §2.4 exec mode) -------------------
+at = Autotuning(min=-20, max=20, ignore=0, dim=2, num_opt=4, max_iter=25, seed=0)
+p = at.point
+while not at.finished:
+    cost = (p["p0"] - 7) ** 2 + (p["p1"] + 3) ** 2  # the app computes its own cost
+    p = at.exec(cost)
+print("exec-mode optimum:", at.best_point)  # -> {'p0': 7, 'p1': -3}
+
+# ---- 2. Runtime mode: tune a jitted function's block size ------------------
+x = jnp.ones((512, 512))
+
+
+def make_fn(block):  # smaller blocks do redundant passes — a runtime knob
+    @jax.jit
+    def fn(x):
+        acc = x
+        for _ in range(512 // block):
+            acc = acc + jnp.tanh(x)
+        return acc
+
+    return fn
+
+
+fns = {}
+at = Autotuning(space=SearchSpace([LogIntDim("block", 32, 512)]),
+                ignore=1,  # first call per candidate absorbs XLA compile
+                optimizer=CSA(1, num_opt=4, max_iter=6, seed=0), cache=True)
+while not at.finished:
+    knobs = at.start()  # paper start()/end() runtime brackets
+    fn = fns.setdefault(knobs["block"], make_fn(knobs["block"]))
+    out = fn(x)
+    at.end(out)  # blocks on the result, measures wall time
+print("runtime-mode block size:", at.best_point, f"({at.num_measurements} measurements)")

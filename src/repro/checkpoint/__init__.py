@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic sharded npz + manifest + checksums,
+async save, keep-last-k, mesh-elastic restore."""
+from .store import CheckpointManager, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]

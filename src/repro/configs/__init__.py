@@ -1,0 +1,79 @@
+"""Architecture registry: the 10 assigned configs (+ reduced smoke variants).
+
+Every module defines ``CONFIG`` (the exact published config) and ``tiny()``
+(a reduced same-family config for CPU smoke tests).  Select with
+``--arch <id>`` in the launchers; ``get(name)`` / ``get_tiny(name)`` here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "llama_3_2_vision_11b",
+    "qwen2_7b",
+    "starcoder2_15b",
+    "qwen2_72b",
+    "llama3_405b",
+    "seamless_m4t_large_v2",
+    "rwkv6_7b",
+    "arctic_480b",
+    "moonshot_v1_16b_a3b",
+    "recurrentgemma_2b",
+]
+
+# canonical dashed names (as in the assignment) -> module ids
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+ALIASES.update({"llama-3.2-vision-11b": "llama_3_2_vision_11b",
+                "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+                "seamless-m4t-large-v2": "seamless_m4t_large_v2"})
+
+
+def _module(name: str):
+    key = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_tiny(name: str) -> ModelConfig:
+    return _module(name).tiny()
+
+
+def all_configs():
+    return {a: get(a) for a in ARCH_IDS}
+
+
+# ----------------------------------------------------------------- shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cells(include_skips: bool = False):
+    """All (arch, shape) cells.  long_500k runs only for sub-quadratic archs
+    (rwkv6, recurrentgemma) — the 8 full-attention skips are documented in
+    DESIGN.md §Arch-applicability."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get(a)
+        for s in SHAPES.values():
+            runnable = s.name != "long_500k" or cfg.subquadratic
+            if runnable or include_skips:
+                out.append((a, s.name, runnable))
+    return out

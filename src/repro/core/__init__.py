@@ -1,0 +1,43 @@
+"""repro.core — PATSMA (Parameter Auto-Tuning for Shared Memory Algorithms)
+ported to JAX: staged numerical optimizers (CSA, Nelder–Mead), the Autotuning
+driver with Single-Iteration / Entire-Execution × Runtime / user-cost modes,
+search-space codecs, and the cost backends used across the framework.
+"""
+from .autotuning import Autotuning
+from .costs import (
+    TPU_V5E,
+    HardwareSpec,
+    RooflineTerms,
+    RuntimeCost,
+    collective_bytes,
+    hlo_flops_bytes,
+    roofline_terms,
+)
+from .csa import CSA
+from .grid_random import GridSearch, RandomSearch
+from .nelder_mead import NelderMead
+from .optimizer import NumericalOptimizer
+from .space import ChoiceDim, FloatDim, IntDim, LogIntDim, SearchSpace
+from .tuned_jit import TunedStep
+
+__all__ = [
+    "Autotuning",
+    "CSA",
+    "NelderMead",
+    "GridSearch",
+    "RandomSearch",
+    "NumericalOptimizer",
+    "SearchSpace",
+    "IntDim",
+    "FloatDim",
+    "LogIntDim",
+    "ChoiceDim",
+    "TunedStep",
+    "RuntimeCost",
+    "HardwareSpec",
+    "RooflineTerms",
+    "TPU_V5E",
+    "collective_bytes",
+    "hlo_flops_bytes",
+    "roofline_terms",
+]

@@ -1,0 +1,256 @@
+"""The ``Autotuning`` driver — PATSMA's user-facing class (paper §2.3/§2.4).
+
+Execution modes (paper Fig. 1):
+
+  * **Single Iteration** (Fig. 1a): one auto-tuning iteration per natural
+    iteration of the target loop — ``single_exec_runtime`` /
+    ``single_exec``, or the raw ``start()``/``end()`` brackets.
+  * **Entire Execution** (Fig. 1b): the full tuning loop is run up-front on a
+    replica of the target — ``entire_exec_runtime`` / ``entire_exec``.
+
+Each mode has a **Runtime** flavour (PATSMA measures the wall time of the
+bracketed section itself — adapted here with ``jax.block_until_ready`` so
+asynchronous dispatch does not hide the cost) and a user-cost flavour
+(``exec(cost)`` — the application supplies any cost it likes).
+
+``ignore`` (paper §2.3): per candidate solution, the first ``ignore`` target
+iterations are measured and discarded so execution stabilizes.  In the JAX
+port this is what absorbs XLA compile time: the first call of a jitted step
+with new static knobs compiles, the ``ignore+1``-th call measures steady
+state.  Evaluation counts follow paper Eq. (1)/(2).
+
+Beyond-paper (flagged, default off → faithful): ``cache=True`` memoizes cost
+by decoded point so the optimizer never re-measures a revisited candidate.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from .csa import CSA
+from .nelder_mead import NelderMead
+from .optimizer import NumericalOptimizer
+from .space import SearchSpace
+
+__all__ = ["Autotuning"]
+
+
+def _block(x):
+    """Block on JAX results so wall time includes the actual computation."""
+    try:
+        import jax
+
+        return jax.block_until_ready(x)
+    except Exception:
+        return x
+
+
+class Autotuning:
+    """Paper API::
+
+        Autotuning(min, max, ignore, dim, num_opt, max_iter)      # default CSA
+        Autotuning(min, max, ignore, optimizer=<NumericalOptimizer>)
+
+    plus the extended form ``Autotuning(space=SearchSpace(...), ...)``.
+    Decoded points are dicts ``{dim_name: value}``; the paper-style vector
+    form is available via ``point_vector``.
+    """
+
+    def __init__(
+        self,
+        min: Any = -1.0,  # noqa: A002 - paper parameter names
+        max: Any = 1.0,  # noqa: A002
+        ignore: int = 0,
+        dim: int = 1,
+        num_opt: int = 4,
+        max_iter: int = 20,
+        *,
+        optimizer: Optional[NumericalOptimizer] = None,
+        space: Optional[SearchSpace] = None,
+        integer: bool = True,
+        seed: int = 0,
+        cache: bool = False,
+        verbose: bool = False,
+    ) -> None:
+        if ignore < 0:
+            raise ValueError("ignore must be >= 0")
+        self.space = space if space is not None else SearchSpace.uniform(
+            min, max, dim, integer=integer
+        )
+        d = len(self.space)
+        self.optimizer = optimizer if optimizer is not None else CSA(
+            d, num_opt=num_opt, max_iter=max_iter, seed=seed
+        )
+        if self.optimizer.get_dimension() != d:
+            raise ValueError(
+                f"optimizer dim {self.optimizer.get_dimension()} != space dim {d}"
+            )
+        self.ignore = int(ignore)
+        self.verbose = verbose
+        self._use_cache = bool(cache)
+        self._cost_cache: dict = {}
+        self._t0: Optional[float] = None
+        self._ignore_left = self.ignore
+        self._evals = 0  # completed cost evaluations fed to the optimizer
+        self._measurements = 0  # target iterations spent on tuning (incl. ignored)
+        self._history: list = []  # (point_dict, cost)
+        # prime: first run() call's cost is ignored by contract
+        self._z = self.optimizer.run(np.nan)
+        self._point = self.space.decode(self._z)
+        self._advance_through_cache()
+
+    # ----------------------------------------------------------- properties
+    @property
+    def finished(self) -> bool:
+        return self.optimizer.is_end()
+
+    @property
+    def point(self) -> dict:
+        """Current candidate (or final solution once finished), decoded."""
+        return dict(self._point)
+
+    @property
+    def point_vector(self) -> list:
+        return list(self._point.values())
+
+    @property
+    def best_point(self) -> dict:
+        if np.isfinite(self.optimizer.best_cost):
+            return self.space.decode(self.optimizer.best_solution)
+        return dict(self._point)
+
+    @property
+    def best_cost(self) -> float:
+        return self.optimizer.best_cost
+
+    @property
+    def num_evals(self) -> int:
+        return self._evals
+
+    @property
+    def num_measurements(self) -> int:
+        return self._measurements
+
+    @property
+    def history(self) -> list:
+        return list(self._history)
+
+    def reset(self, level: int = 0) -> None:
+        """Re-enter tuning (e.g. when the watchdog detects environment drift).
+
+        Forwards to the optimizer's reset (paper §2.2).  Level >= 2 also
+        clears the cost cache — the old measurements no longer describe the
+        environment."""
+        self.optimizer.reset(level)
+        if level >= 2:
+            self._cost_cache.clear()
+        self._t0 = None
+        self._ignore_left = self.ignore
+        self._z = self.optimizer.run(np.nan)
+        self._point = self.space.decode(self._z)
+        self._advance_through_cache()
+
+    def print(self) -> None:  # noqa: A003 - paper API name
+        self.optimizer.print()
+
+    # ------------------------------------------------- start/end (Runtime)
+    def start(self) -> dict:
+        """Begin the measured section; returns the candidate to use."""
+        if not self.finished:
+            self._t0 = time.perf_counter()
+        return self.point
+
+    def end(self, result: Any = None) -> None:
+        """End the measured section (blocks on ``result`` if given)."""
+        if self.finished or self._t0 is None:
+            return
+        _block(result)
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self._feed(dt)
+
+    # ------------------------------------------------------ exec (user cost)
+    def exec(self, cost: float) -> dict:  # noqa: A003 - paper API name
+        """Deliver a user-computed cost for the current candidate; returns the
+        next candidate (paper §2.4: cost is always associated with the last
+        returned solution)."""
+        if not self.finished:
+            self._feed(float(cost))
+        return self.point
+
+    # --------------------------------------------------------- cost plumbing
+    def _feed(self, cost: float) -> None:
+        self._measurements += 1
+        if self._ignore_left > 0:  # stabilization iterations (paper `ignore`)
+            self._ignore_left -= 1
+            return
+        self._deliver(cost, cacheable=True)
+
+    def _deliver(self, cost: float, cacheable: bool) -> None:
+        key = self.space.key(self._point)
+        if cacheable and self._use_cache:
+            self._cost_cache[key] = cost
+        self._evals += 1
+        self._history.append((dict(self._point), float(cost)))
+        if self.verbose:
+            print(f"[patsma] eval#{self._evals} {self._point} -> {cost:.6g}")
+        self._z = self.optimizer.run(cost)
+        self._point = self.space.decode(self._z)
+        self._ignore_left = self.ignore
+        self._advance_through_cache()
+
+    def _advance_through_cache(self) -> None:
+        """If caching is on, answer revisited candidates from the cache."""
+        if not self._use_cache:
+            return
+        guard = 0
+        while not self.finished:
+            key = self.space.key(self._point)
+            if key not in self._cost_cache:
+                return
+            self._deliver(self._cost_cache[key], cacheable=False)
+            guard += 1
+            if guard > 100_000:  # safety: pathological optimizer loop
+                return
+
+    # ------------------------------------------------- pre-programmed modes
+    # Paper Algorithm 3.  `point_arg` semantics: the function receives the
+    # decoded point dict's values in declaration order, prepended to *args
+    # (paper: "the initial variable must serve as both input and output").
+    def single_exec_runtime(self, func: Callable, *args, **kwargs):
+        """One tuning iteration per call; PATSMA measures the runtime
+        (paper ``singleExecRuntime``, Fig. 1a).  Returns func's result."""
+        point = self.start()
+        result = func(*self._point_args(point), *args, **kwargs)
+        self.end(result)
+        return result
+
+    def single_exec(self, func: Callable, *args, **kwargs):
+        """One tuning iteration per call; ``func`` returns the cost
+        (paper ``singleExec``)."""
+        if self.finished:
+            return func(*self._point_args(self.point), *args, **kwargs)
+        cost = func(*self._point_args(self.point), *args, **kwargs)
+        self.exec(float(cost))
+        return cost
+
+    def entire_exec_runtime(self, func: Callable, *args, **kwargs) -> dict:
+        """Run the complete tuning loop now, measuring runtimes of replica
+        executions (paper ``entireExecRuntime``, Fig. 1b).  Returns the final
+        point."""
+        while not self.finished:
+            self.single_exec_runtime(func, *args, **kwargs)
+        return self.point
+
+    def entire_exec(self, func: Callable, *args, **kwargs) -> dict:
+        """Run the complete tuning loop now with func-supplied costs
+        (paper ``entireExec``)."""
+        while not self.finished:
+            self.single_exec(func, *args, **kwargs)
+        return self.point
+
+    @staticmethod
+    def _point_args(point: dict) -> tuple:
+        return tuple(point.values())

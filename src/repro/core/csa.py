@@ -1,0 +1,218 @@
+"""Coupled Simulated Annealing (CSA) — PATSMA's primary optimizer.
+
+Faithful implementation of CSA with modified (coupled) acceptance and
+acceptance-variance control, after
+
+    Xavier-de-Souza, Suykens, Vandewalle, Bollé,
+    "Coupled Simulated Annealing", IEEE Trans. SMC-B 40(2), 2010.
+
+``m = num_opt`` SA solvers run in parallel.  Each solver ``i`` holds a current
+solution ``x_i`` with energy ``E_i``.  Probes are generated with a Cauchy-like
+kernel scaled by the generation temperature ``T_gen`` (schedule
+``T_gen_k = T_gen0 / k``).  Acceptance of an *uphill* probe is coupled across
+solvers through
+
+    gamma   = sum_j exp((E_j - max_j E_j) / T_ac)
+    A_i     = exp((E_i - max_j E_j) / T_ac) / gamma
+
+and the acceptance temperature ``T_ac`` is steered so that the variance of
+``A`` approaches ``sigma_D^2 = 0.99 * (m-1)/m^2`` (99% of its maximum), the
+rule recommended in the CSA paper: variance below target → multiply ``T_ac``
+by ``(1 - alpha)``, above → ``(1 + alpha)``.
+
+Staging (paper §2.2): ``run(cost)`` is a state machine —
+
+    INIT   : emit the m initial random solutions one per call;
+    PROBE  : per CSA iteration, emit one probe per solver (m calls); when the
+             last probe's cost arrives, perform the coupled acceptance step,
+             update temperatures, advance the iteration counter;
+    DONE   : after ``max_iter`` iterations, keep returning the best solution.
+
+Evaluation count therefore matches paper Eq. (1):
+``num_eval = max_iter * (ignore + 1) * num_opt`` (the INIT round counts as
+iteration 1; ``ignore`` is applied by the Autotuning driver).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .optimizer import NumericalOptimizer
+
+__all__ = ["CSA"]
+
+_INIT, _PROBE, _DONE = 0, 1, 2
+
+
+class CSA(NumericalOptimizer):
+    def __init__(
+        self,
+        dim: int,
+        num_opt: int = 4,
+        max_iter: int = 100,
+        *,
+        tgen0: float = 1.0,
+        tac0: float = 0.9,
+        alpha: float = 0.05,
+        seed: int = 0,
+    ) -> None:
+        if dim < 1:
+            raise ValueError(f"dim must be >= 1, got {dim}")
+        if num_opt < 2:
+            raise ValueError(f"CSA needs num_opt >= 2 coupled solvers, got {num_opt}")
+        if max_iter < 1:
+            raise ValueError(f"max_iter must be >= 1, got {max_iter}")
+        self._dim = dim
+        self._m = num_opt
+        self._max_iter = max_iter
+        self._tgen0 = float(tgen0)
+        self._tac0 = float(tac0)
+        self._alpha = float(alpha)
+        self._seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._full_init()
+
+    # ------------------------------------------------------------------ state
+    def _full_init(self) -> None:
+        self._x = self._rng.uniform(self.LO, self.HI, size=(self._m, self._dim))
+        self._e = np.full(self._m, np.inf)
+        self._probes = np.zeros_like(self._x)
+        self._probe_e = np.full(self._m, np.inf)
+        self._tgen = self._tgen0
+        self._tac = self._tac0
+        self._iter = 1  # INIT round is iteration 1 (keeps Eq.1 exact)
+        self._idx = 0  # which solver's point is in flight
+        self._phase = _INIT
+        self._best_x = self._x[0].copy()
+        self._best_e = np.inf
+        # target acceptance-probability variance (99% of max, CSA paper §V)
+        self._sigma_d2 = 0.99 * (self._m - 1) / self._m**2
+
+    # ------------------------------------------------------------- interface
+    def get_num_points(self) -> int:
+        return self._m
+
+    def get_dimension(self) -> int:
+        return self._dim
+
+    def is_end(self) -> bool:
+        return self._phase == _DONE
+
+    @property
+    def best_solution(self) -> np.ndarray:
+        return self._best_x.copy()
+
+    @property
+    def best_cost(self) -> float:
+        return float(self._best_e)
+
+    @property
+    def iteration(self) -> int:
+        return self._iter
+
+    @property
+    def temperatures(self) -> tuple:
+        return (self._tgen, self._tac)
+
+    def print(self) -> None:  # noqa: A003 - paper API name
+        print(
+            f"CSA(m={self._m}, dim={self._dim}) iter={self._iter}/{self._max_iter} "
+            f"phase={self._phase} Tgen={self._tgen:.4g} Tac={self._tac:.4g} "
+            f"best={self._best_e:.6g} @ {np.array2string(self._best_x, precision=3)}"
+        )
+
+    def reset(self, level: int = 0) -> None:
+        """level 0: re-anneal keeping all current solutions;
+        level 1: keep only the best solution, randomize the rest;
+        level >= 2: complete reset (paper §2.2: 'a complete reset')."""
+        if level >= 2:
+            self._rng = np.random.default_rng(self._seed)
+            self._full_init()
+            return
+        if level == 1:
+            keep = self._best_x.copy()
+            self._x = self._rng.uniform(self.LO, self.HI, size=(self._m, self._dim))
+            self._x[0] = keep
+        # level 0 and 1 share: restart the annealing schedule + re-evaluate
+        self._e = np.full(self._m, np.inf)
+        self._tgen = self._tgen0
+        self._tac = self._tac0
+        self._iter = 1
+        self._idx = 0
+        self._phase = _INIT
+
+    # ------------------------------------------------------------------- run
+    def run(self, cost: float) -> np.ndarray:
+        if self._phase == _DONE:
+            return self.best_solution
+
+        if self._phase == _INIT:
+            return self._run_init(cost)
+        return self._run_probe(cost)
+
+    def _note_best(self, x: np.ndarray, e: float) -> None:
+        if e < self._best_e:
+            self._best_e = e
+            self._best_x = x.copy()
+
+    def _run_init(self, cost: float) -> np.ndarray:
+        # deliver cost of previously returned initial point (if any)
+        cost = float(cost) if np.isfinite(cost) else np.inf
+        if self._idx > 0:
+            self._e[self._idx - 1] = cost
+            self._note_best(self._x[self._idx - 1], cost)
+        if self._idx < self._m:
+            out = self._x[self._idx].copy()
+            self._idx += 1
+            return out
+        # all initial points evaluated → INIT round was iteration 1
+        return self._finish_round_and_emit(first_cost_already_stored=True)
+
+    def _run_probe(self, cost: float) -> np.ndarray:
+        cost = float(cost) if np.isfinite(cost) else np.inf  # crashed candidate
+        self._probe_e[self._idx - 1] = cost
+        self._note_best(self._probes[self._idx - 1], cost)
+        if self._idx < self._m:
+            out = self._gen_probe(self._idx)
+            self._idx += 1
+            return out
+        return self._finish_round_and_emit(first_cost_already_stored=False)
+
+    def _finish_round_and_emit(self, first_cost_already_stored: bool) -> np.ndarray:
+        if not first_cost_already_stored:
+            self._coupled_acceptance()
+        self._iter += 1
+        if self._iter > self._max_iter:
+            self._phase = _DONE
+            return self.best_solution
+        # begin next probe round
+        self._phase = _PROBE
+        self._tgen = self._tgen0 / self._iter  # T_gen_k = T_gen0 / k
+        self._idx = 1
+        return self._gen_probe(0)
+
+    def _gen_probe(self, i: int) -> np.ndarray:
+        u = self._rng.uniform(size=self._dim)
+        step = self._tgen * np.tan(np.pi * (u - 0.5))  # Cauchy kernel
+        y = self._wrap(self._x[i] + step)
+        self._probes[i] = y
+        return y.copy()
+
+    def _coupled_acceptance(self) -> None:
+        e = self._e
+        emax = float(np.max(e[np.isfinite(e)])) if np.any(np.isfinite(e)) else 0.0
+        ex = np.exp((np.where(np.isfinite(e), e, emax) - emax) / max(self._tac, 1e-300))
+        gamma = float(np.sum(ex))
+        probs = ex / gamma  # A_i, sum to 1
+        for i in range(self._m):
+            if not np.isfinite(self._probe_e[i]):
+                continue  # never move onto a crashed configuration
+            downhill = self._probe_e[i] < self._e[i]
+            if downhill or self._rng.uniform() < probs[i]:
+                self._x[i] = self._probes[i]
+                self._e[i] = self._probe_e[i]
+        # variance steering of T_ac toward sigma_D^2 = 0.99*(m-1)/m^2
+        sigma2 = float(np.mean(probs**2) - (1.0 / self._m) ** 2)
+        if sigma2 < self._sigma_d2:
+            self._tac *= 1.0 - self._alpha
+        else:
+            self._tac *= 1.0 + self._alpha

@@ -1,0 +1,111 @@
+"""Beyond-paper baseline optimizers sharing the NumericalOptimizer interface.
+
+The paper's interface (§2.2) is explicitly designed so "other optimization
+methods can be incorporated as a new class".  These two are used as controls
+in the benchmarks (exhaustive truth for small spaces; random-search baseline
+for the CSA-vs-NM comparisons).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .optimizer import NumericalOptimizer
+
+__all__ = ["GridSearch", "RandomSearch"]
+
+
+class GridSearch(NumericalOptimizer):
+    """Exhaustive scan of a regular grid over [-1,1]^dim."""
+
+    def __init__(self, dim: int, points_per_dim: int = 8) -> None:
+        self._dim = dim
+        self._ppd = int(points_per_dim)
+        axes = [np.linspace(-1.0, 1.0, self._ppd) for _ in range(dim)]
+        grid = np.meshgrid(*axes, indexing="ij")
+        self._pts = np.stack([g.reshape(-1) for g in grid], axis=-1)
+        self._i = 0
+        self._best_x = self._pts[0].copy()
+        self._best_e = np.inf
+
+    def get_num_points(self) -> int:
+        return len(self._pts)
+
+    def get_dimension(self) -> int:
+        return self._dim
+
+    def is_end(self) -> bool:
+        return self._i > len(self._pts)
+
+    @property
+    def best_solution(self) -> np.ndarray:
+        return self._best_x.copy()
+
+    @property
+    def best_cost(self) -> float:
+        return float(self._best_e)
+
+    def reset(self, level: int = 0) -> None:
+        self._i = 0
+        if level >= 2:
+            self._best_e = np.inf
+
+    def run(self, cost: float) -> np.ndarray:
+        if self._i > 0 and self._i <= len(self._pts) and np.isfinite(cost):
+            if cost < self._best_e:
+                self._best_e = float(cost)
+                self._best_x = self._pts[self._i - 1].copy()
+        if self._i < len(self._pts):
+            out = self._pts[self._i].copy()
+            self._i += 1
+            return out
+        self._i = len(self._pts) + 1
+        return self.best_solution
+
+
+class RandomSearch(NumericalOptimizer):
+    """Uniform random sampling for ``max_iter`` evaluations."""
+
+    def __init__(self, dim: int, max_iter: int = 64, seed: int = 0) -> None:
+        self._dim = dim
+        self._max = int(max_iter)
+        self._seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._i = 0
+        self._last = None
+        self._best_x = np.zeros(dim)
+        self._best_e = np.inf
+
+    def get_num_points(self) -> int:
+        return 1
+
+    def get_dimension(self) -> int:
+        return self._dim
+
+    def is_end(self) -> bool:
+        return self._i > self._max
+
+    @property
+    def best_solution(self) -> np.ndarray:
+        return self._best_x.copy()
+
+    @property
+    def best_cost(self) -> float:
+        return float(self._best_e)
+
+    def reset(self, level: int = 0) -> None:
+        self._i = 0
+        if level >= 2:
+            self._rng = np.random.default_rng(self._seed)
+            self._best_e = np.inf
+
+    def run(self, cost: float) -> np.ndarray:
+        if self._last is not None and np.isfinite(cost) and cost < self._best_e:
+            self._best_e = float(cost)
+            self._best_x = self._last.copy()
+        if self._i < self._max:
+            self._last = self._rng.uniform(-1.0, 1.0, size=self._dim)
+            self._i += 1
+            return self._last.copy()
+        self._i = self._max + 1
+        self._last = None
+        return self.best_solution

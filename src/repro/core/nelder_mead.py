@@ -1,0 +1,255 @@
+"""Staged Nelder–Mead simplex optimizer (paper's second method).
+
+Nelder & Mead, "A Simplex Method for Function Minimization", Comput J 1965.
+
+Implements the standard reflection/expansion/contraction/shrink moves as a
+``run(cost)`` state machine (one cost evaluation per call), matching PATSMA's
+constructor ``NelderMead(int dim, double error, int max_iter = 0)``:
+
+  * ``error``    — stop when the simplex cost spread ``max_i |E_i - E_best|``
+                   falls below it;
+  * ``max_iter`` — maximum number of cost evaluations (0 = unbounded), so that
+                   paper Eq. (2) holds: ``num_eval = max_iter * (ignore + 1)``.
+
+Solutions live in ``[-1, 1]^dim`` and are clipped (NM is a local method; PATSMA
+wraps only CSA).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .optimizer import NumericalOptimizer
+
+__all__ = ["NelderMead"]
+
+# stages
+_INIT, _REFLECT, _EXPAND, _CONTRACT, _SHRINK, _DONE = range(6)
+
+
+class NelderMead(NumericalOptimizer):
+    def __init__(
+        self,
+        dim: int,
+        error: float = 1e-6,
+        max_iter: int = 0,
+        *,
+        alpha: float = 1.0,
+        gamma: float = 2.0,
+        beta: float = 0.5,
+        sigma: float = 0.5,
+        init_scale: float = 0.5,
+        seed: int = 0,
+    ) -> None:
+        if dim < 1:
+            raise ValueError(f"dim must be >= 1, got {dim}")
+        self._dim = dim
+        self._error = float(error)
+        self._max_evals = int(max_iter)  # paper calls it max_iter; it counts evals
+        self._alpha, self._gamma, self._beta, self._sigma = alpha, gamma, beta, sigma
+        self._init_scale = init_scale
+        self._seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._full_init()
+
+    # ------------------------------------------------------------------ state
+    def _full_init(self) -> None:
+        n = self._dim
+        x0 = self._rng.uniform(-self._init_scale, self._init_scale, size=n)
+        self._simplex = np.tile(x0, (n + 1, 1))
+        for i in range(n):
+            self._simplex[i + 1, i] = self._clip(
+                self._simplex[i + 1, i] + self._init_scale
+            )[()]
+        self._costs = np.full(n + 1, np.inf)
+        self._stage = _INIT
+        self._idx = 0  # vertex index being evaluated (INIT / SHRINK)
+        self._evals = 0
+        self._pending: np.ndarray | None = None  # point whose cost we await
+        self._x_r: np.ndarray | None = None
+        self._e_r: float = np.inf
+        self._shrink_queue: list[int] = []
+        self._best_x = self._simplex[0].copy()
+        self._best_e = np.inf
+
+    # ------------------------------------------------------------- interface
+    def get_num_points(self) -> int:
+        return self._dim + 1
+
+    def get_dimension(self) -> int:
+        return self._dim
+
+    def is_end(self) -> bool:
+        return self._stage == _DONE
+
+    @property
+    def best_solution(self) -> np.ndarray:
+        return self._best_x.copy()
+
+    @property
+    def best_cost(self) -> float:
+        return float(self._best_e)
+
+    @property
+    def evaluations(self) -> int:
+        return self._evals
+
+    def print(self) -> None:  # noqa: A003 - paper API name
+        print(
+            f"NelderMead(dim={self._dim}) evals={self._evals} stage={self._stage} "
+            f"spread={self._spread():.3g} best={self._best_e:.6g}"
+        )
+
+    def reset(self, level: int = 0) -> None:
+        """level 0: rebuild the simplex around the best-known solution;
+        level >= 1: complete reset from a fresh random simplex."""
+        if level >= 1:
+            self._rng = np.random.default_rng(self._seed)
+            self._full_init()
+            return
+        best_x, best_e = self._best_x.copy(), self._best_e
+        self._full_init()
+        self._simplex[0] = best_x
+        self._best_x = best_x
+        self._best_e = best_e  # level 0 retains the solutions found (§2.2)
+
+    # ------------------------------------------------------------------- run
+    def run(self, cost: float) -> np.ndarray:
+        if self._stage == _DONE:
+            return self.best_solution
+        cost = float(cost) if np.isfinite(cost) else np.inf
+
+        if self._pending is not None:
+            self._evals += 1
+            if cost < self._best_e:
+                self._best_e = cost
+                self._best_x = self._pending.copy()
+            self._dispatch_cost(cost)
+            if self._stage == _DONE:
+                return self.best_solution
+            if self._exhausted():
+                self._stage = _DONE
+                return self.best_solution
+
+        return self._emit_next()
+
+    def _exhausted(self) -> bool:
+        return self._max_evals > 0 and self._evals >= self._max_evals
+
+    def _spread(self) -> float:
+        finite = self._costs[np.isfinite(self._costs)]
+        if finite.size < 2:
+            return np.inf
+        return float(np.max(finite) - np.min(finite))
+
+    # ------------------------------------------------------------ transitions
+    def _emit(self, x: np.ndarray) -> np.ndarray:
+        self._pending = x.copy()
+        return x.copy()
+
+    def _emit_next(self) -> np.ndarray:
+        if self._pending is not None:
+            # dispatch staged the next point itself (expansion / contraction)
+            return self._pending.copy()
+        if self._stage == _INIT:
+            return self._emit(self._simplex[self._idx])
+        if self._stage == _SHRINK:
+            return self._emit(self._simplex[self._shrink_queue[0]])
+        # start a fresh NM iteration: order simplex, reflect the worst
+        self._order()
+        if self._spread() < self._error:
+            self._stage = _DONE
+            return self.best_solution
+        c = self._centroid()
+        self._x_r = self._clip(c + self._alpha * (c - self._simplex[-1]))
+        self._stage = _REFLECT
+        return self._emit(self._x_r)
+
+    def _dispatch_cost(self, cost: float) -> None:
+        if self._stage == _INIT:
+            self._costs[self._idx] = cost
+            self._idx += 1
+            self._pending = None
+            if self._idx > self._dim:
+                self._begin_iteration()  # full simplex known; next emit reflects
+            return
+
+        if self._stage == _REFLECT:
+            self._e_r = cost
+            c = self._centroid()
+            if cost < self._costs[0]:
+                # try expansion
+                x_e = self._clip(c + self._gamma * (self._x_r - c))
+                if np.allclose(x_e, self._x_r):
+                    self._accept(self._x_r, cost)
+                    self._begin_iteration()
+                else:
+                    self._stage = _EXPAND
+                    self._pending = x_e
+                return
+            if cost < self._costs[-2]:
+                self._accept(self._x_r, cost)
+                self._begin_iteration()
+                return
+            # contraction (outside if reflect better than worst, else inside)
+            if cost < self._costs[-1]:
+                x_c = self._clip(c + self._beta * (self._x_r - c))
+            else:
+                x_c = self._clip(c - self._beta * (c - self._simplex[-1]))
+            self._stage = _CONTRACT
+            self._pending = x_c
+            return
+
+        if self._stage == _EXPAND:
+            if cost < self._e_r:
+                self._accept(self._pending, cost)
+            else:
+                self._accept(self._x_r, self._e_r)
+            self._begin_iteration()
+            return
+
+        if self._stage == _CONTRACT:
+            if cost < min(self._e_r, self._costs[-1]):
+                self._accept(self._pending, cost)
+                self._begin_iteration()
+                return
+            # shrink toward the best vertex
+            for i in range(1, self._dim + 1):
+                self._simplex[i] = self._clip(
+                    self._simplex[0] + self._sigma * (self._simplex[i] - self._simplex[0])
+                )
+                self._costs[i] = np.inf
+            self._shrink_queue = list(range(1, self._dim + 1))
+            self._stage = _SHRINK
+            self._pending = None
+            return
+
+        if self._stage == _SHRINK:
+            i = self._shrink_queue.pop(0)
+            self._costs[i] = cost
+            if not self._shrink_queue:
+                self._begin_iteration()
+            else:
+                self._pending = None
+            return
+
+    def _accept(self, x: np.ndarray, cost: float) -> None:
+        """Replace the worst vertex."""
+        self._simplex[-1] = x
+        self._costs[-1] = cost
+
+    def _begin_iteration(self) -> None:
+        """Mark that the next emit starts a fresh order/reflect cycle."""
+        self._stage = _REFLECT
+        self._pending = None
+        self._x_r = None
+        self._e_r = np.inf
+        # _emit_next() recognises a fresh cycle because _pending is None and
+        # stage is _REFLECT with _x_r unset → it orders and reflects.
+
+    def _order(self) -> None:
+        order = np.argsort(self._costs, kind="stable")
+        self._simplex = self._simplex[order]
+        self._costs = self._costs[order]
+
+    def _centroid(self) -> np.ndarray:
+        return np.mean(self._simplex[:-1], axis=0)

@@ -1,0 +1,84 @@
+"""NumericalOptimizer interface — faithful port of PATSMA Algorithm 1.
+
+The paper's interface (C++):
+
+    class NumericalOptimizer {
+      virtual double* run(double cost) = 0;
+      virtual int getNumPoints() const = 0;
+      virtual int getDimension() const = 0;
+      virtual bool isEnd() const = 0;
+      virtual void reset(int level) {};
+      virtual void print() const {}
+    };
+
+The key contract (paper §2.2): ``run`` is a *staged* state machine.  Each call
+delivers the cost of the **previously returned** candidate and receives the
+next candidate to test.  The first call's cost argument is ignored.  Once the
+optimization has ended, ``run`` keeps returning the final solution (which does
+not require further testing) and ``is_end()`` is True.
+
+Optimizers work in the normalized hypercube ``[-1, 1]^dim``; rescaling to the
+user domain (min/max, int/float/log/categorical) is the responsibility of
+:class:`repro.core.space.SearchSpace` inside :class:`repro.core.autotuning.Autotuning`.
+"""
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+__all__ = ["NumericalOptimizer"]
+
+
+class NumericalOptimizer(abc.ABC):
+    """Abstract staged optimizer (paper Algorithm 1)."""
+
+    #: normalized search bounds
+    LO: float = -1.0
+    HI: float = 1.0
+
+    @abc.abstractmethod
+    def run(self, cost: float) -> np.ndarray:
+        """Deliver ``cost`` of the last returned candidate; return the next one.
+
+        Returns an array of shape ``(dimension,)`` in ``[-1, 1]``.  After
+        :meth:`is_end` becomes True, returns the final solution.
+        """
+
+    @abc.abstractmethod
+    def get_num_points(self) -> int:
+        """Number of solutions the algorithm maintains (``num_opt`` for CSA)."""
+
+    @abc.abstractmethod
+    def get_dimension(self) -> int:
+        """Dimensionality of the solutions."""
+
+    @abc.abstractmethod
+    def is_end(self) -> bool:
+        """Whether the optimization has finished."""
+
+    def reset(self, level: int = 0) -> None:  # optional (paper line 10)
+        """Reset the optimization.  ``level`` semantics (paper §2.2):
+        0 → light reset retaining found solutions; higher levels discard
+        progressively more, up to a complete reset."""
+
+    def print(self) -> None:  # optional (paper line 11); keep the paper's name
+        """Print debug/verbose optimizer state."""
+
+    # --- conveniences shared by all implementations -------------------------
+    @property
+    def best_solution(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def best_cost(self) -> float:
+        raise NotImplementedError
+
+    @staticmethod
+    def _wrap(z: np.ndarray) -> np.ndarray:
+        """Wrap into [-1, 1] (toroidal, as PATSMA's CSA does with fmod)."""
+        return np.mod(z + 1.0, 2.0) - 1.0
+
+    @staticmethod
+    def _clip(z: np.ndarray) -> np.ndarray:
+        return np.clip(z, -1.0, 1.0)

@@ -1,0 +1,164 @@
+"""Search-space codec: optimizer hypercube [-1,1]^d  <->  user parameter domain.
+
+PATSMA's C++ API exposes scalar ``min``/``max`` bounds and templated point
+types (int / floating).  We reproduce that (``SearchSpace.uniform``) and extend
+it with log-scaled and categorical dimensions, which are the natural domains
+for the JAX knobs this framework tunes (block sizes are powers of two, remat
+policies are categorical, ...).  The extension is additive: a plain
+``Autotuning(min, max, ignore, dim, ...)`` behaves exactly like the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import numpy as np
+
+__all__ = ["IntDim", "FloatDim", "LogIntDim", "ChoiceDim", "SearchSpace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IntDim:
+    """Integer in [lo, hi] (inclusive), linear scale."""
+
+    name: str
+    lo: int
+    hi: int
+
+    def decode(self, z: float) -> int:
+        t = (z + 1.0) / 2.0  # [-1,1] -> [0,1]
+        v = self.lo + t * (self.hi - self.lo)
+        return int(np.clip(round(v), self.lo, self.hi))
+
+    def encode(self, v: Any) -> float:
+        if self.hi == self.lo:
+            return 0.0
+        t = (float(v) - self.lo) / (self.hi - self.lo)
+        return float(np.clip(2.0 * t - 1.0, -1.0, 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatDim:
+    """Float in [lo, hi], linear scale."""
+
+    name: str
+    lo: float
+    hi: float
+
+    def decode(self, z: float) -> float:
+        t = (z + 1.0) / 2.0
+        return float(np.clip(self.lo + t * (self.hi - self.lo), self.lo, self.hi))
+
+    def encode(self, v: Any) -> float:
+        if self.hi == self.lo:
+            return 0.0
+        t = (float(v) - self.lo) / (self.hi - self.lo)
+        return float(np.clip(2.0 * t - 1.0, -1.0, 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class LogIntDim:
+    """Integer sampled on a log2 grid: {lo, 2*lo, 4*lo, ..., hi}.
+
+    The canonical domain for tile/block sizes (MXU-aligned powers of two).
+    """
+
+    name: str
+    lo: int
+    hi: int
+
+    def __post_init__(self) -> None:
+        if self.lo <= 0 or self.hi < self.lo:
+            raise ValueError(f"bad LogIntDim bounds [{self.lo}, {self.hi}]")
+
+    @property
+    def _steps(self) -> int:
+        return int(math.floor(math.log2(self.hi / self.lo)))
+
+    def decode(self, z: float) -> int:
+        t = (z + 1.0) / 2.0
+        k = int(np.clip(round(t * self._steps), 0, self._steps))
+        return self.lo * (2**k)
+
+    def encode(self, v: Any) -> float:
+        k = math.log2(max(float(v), self.lo) / self.lo)
+        if self._steps == 0:
+            return 0.0
+        return float(np.clip(2.0 * (k / self._steps) - 1.0, -1.0, 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChoiceDim:
+    """Categorical over an ordered tuple of python values."""
+
+    name: str
+    values: tuple
+
+    def __post_init__(self) -> None:
+        if len(self.values) < 1:
+            raise ValueError("ChoiceDim needs at least one value")
+
+    def decode(self, z: float) -> Any:
+        n = len(self.values)
+        t = (z + 1.0) / 2.0
+        i = int(np.clip(round(t * (n - 1)), 0, n - 1))
+        return self.values[i]
+
+    def encode(self, v: Any) -> float:
+        i = self.values.index(v)
+        n = len(self.values)
+        if n == 1:
+            return 0.0
+        return float(np.clip(2.0 * (i / (n - 1)) - 1.0, -1.0, 1.0))
+
+
+class SearchSpace:
+    """Ordered collection of dimensions with vector encode/decode."""
+
+    def __init__(self, dims: Sequence[Any]) -> None:
+        if not dims:
+            raise ValueError("empty search space")
+        self.dims = list(dims)
+        names = [d.name for d in self.dims]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate dim names: {names}")
+
+    @classmethod
+    def uniform(cls, lo, hi, dim: int, integer: bool = True) -> "SearchSpace":
+        """The paper's (min, max, dim) constructor.  ``lo``/``hi`` may be
+        scalars or length-``dim`` sequences."""
+        lo = np.broadcast_to(np.asarray(lo, dtype=float), (dim,))
+        hi = np.broadcast_to(np.asarray(hi, dtype=float), (dim,))
+        mk = IntDim if integer else FloatDim
+        cast = int if integer else float
+        return cls([mk(f"p{i}", cast(lo[i]), cast(hi[i])) for i in range(dim)])
+
+    def __len__(self) -> int:
+        return len(self.dims)
+
+    @property
+    def names(self) -> list:
+        return [d.name for d in self.dims]
+
+    def decode(self, z: np.ndarray) -> dict:
+        z = np.asarray(z, dtype=float).reshape(-1)
+        if z.shape[0] != len(self.dims):
+            raise ValueError(f"point has dim {z.shape[0]}, space has {len(self.dims)}")
+        return {d.name: d.decode(z[i]) for i, d in enumerate(self.dims)}
+
+    def decode_vector(self, z: np.ndarray) -> list:
+        return list(self.decode(z).values())
+
+    def encode(self, values) -> np.ndarray:
+        if isinstance(values, dict):
+            vals = [values[d.name] for d in self.dims]
+        else:
+            vals = list(values)
+        return np.array([d.encode(v) for d, v in zip(self.dims, vals)], dtype=float)
+
+    def key(self, values) -> tuple:
+        """Hashable cache key for a decoded point."""
+        if isinstance(values, dict):
+            return tuple(values[d.name] for d in self.dims)
+        return tuple(values)

@@ -1,0 +1,10 @@
+"""Deterministic synthetic data pipeline (sharded, resumable).
+
+Real deployments swap in a tokenized corpus reader behind the same iterator
+contract: ``(step) -> batch dict`` with per-host sharding and exact resume
+(the pipeline is a pure function of (seed, step), so checkpoint/restart
+replays identically — required by the fault-tolerance tests).
+"""
+from .pipeline import SyntheticLM, make_batch_for
+
+__all__ = ["SyntheticLM", "make_batch_for"]

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles in ref.py.
+
+Tunable block shapes are first-class PATSMA targets; validated on CPU with
+interpret=True against ref.py in tests/test_kernels.py.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,178 @@
+"""Chunked linear-recurrence kernels (Pallas TPU): RWKV-6 WKV and RG-LRU.
+
+Both kernels keep the recurrent state VMEM-resident across a sequential
+chunk grid — the TPU analogue of the GPU "chunked scan" kernels (fla /
+flash-linear-attention): HBM traffic is one pass over the sequence while the
+O(state) carry never leaves VMEM.  ``chunk`` (the tile length) is the
+PATSMA-tunable parameter.
+
+rwkv_scan: per (batch·head, chunk) tile, the intra-chunk term uses exact
+log-space cumulative-decay differences (all exponents <= 0 — numerically
+stable, no decay clamping), the inter-chunk term is one MXU matmul against
+the carried state.
+
+lru_scan: first-order elementwise recurrence h_t = a_t h_{t-1} + b_t; the
+in-chunk step loop is elementwise on (d_block,) lanes; grid parallelism over
+(batch, d-blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv_scan_chunked", "lru_scan_chunked"]
+
+
+# ------------------------------------------------------------------ RWKV-6
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sT_ref, s_scr, *, L, n_chunks):
+    nc = pl.program_id(1)
+
+    @pl.when(nc == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (L, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)  # log decay <= 0
+    u = u_ref[0].astype(jnp.float32)  # (1, hd) bonus
+    S = s_scr[...]  # (hd, hd)
+
+    c = jnp.cumsum(lw, axis=0)  # (L, hd), decreasing
+    # inter-chunk: y += (r_t e^{c_{t-1}}) @ S
+    q_dec = r * jnp.exp(c - lw)
+    y_inter = jax.lax.dot_general(
+        q_dec, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # intra-chunk: scores_ts = sum_i r_t k_s e^{c_{t-1}-c_s} (s<t), + u diag
+    expo = (c - lw)[:, None, :] - c[None, :, :]  # (L, L, hd), <= 0 on s<t
+    ti = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = ti > si
+    ew = jnp.where(tri[:, :, None], jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+    scores = jnp.sum(ew * r[:, None, :] * k[None, :, :], axis=-1)  # (L, L)
+    diag = jnp.sum(r * u * k, axis=-1)  # (L,)
+    scores = jnp.where(ti == si, diag[:, None], scores)
+    y = y_inter + jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update: S' = e^{c_L} ⊙ S + (k e^{c_L - c}).T @ v
+    k_end = k * jnp.exp(c[-1:, :] - c)
+    s_scr[...] = jnp.exp(c[-1, :])[:, None] * S + jax.lax.dot_general(
+        k_end, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(nc == n_chunks - 1)
+    def _emit():
+        sT_ref[0] = s_scr[...]
+
+
+def rwkv_scan_chunked(r, k, v, lw, u, s0, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,lw: (B,T,H,hd); u: (H,hd); s0: (B,H,hd,hd) fp32.
+    Returns y: (B,T,H,hd), sT: (B,H,hd,hd)."""
+    B, T, H, hd = r.shape
+    L = min(chunk, T)
+    if T % L:
+        raise ValueError(f"T={T} not divisible by chunk={L}")
+    n_chunks = T // L
+    BH = B * H
+
+    def flat(x):  # (B,T,H,hd) -> (BH, n_chunks, L, hd) row-major per head
+        return x.transpose(0, 2, 1, 3).reshape(BH, n_chunks, L, hd)
+
+    rf, kf, vf, lwf = flat(r), flat(k), flat(v), flat(lw)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(BH, 1, hd)
+    s0f = s0.reshape(BH, hd, hd)
+    grid = (BH, n_chunks)
+    y, sT = pl.pallas_call(
+        functools.partial(_rwkv_kernel, L=L, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, hd), lambda bh, nc: (bh, nc, 0, 0)),
+            pl.BlockSpec((1, 1, L, hd), lambda bh, nc: (bh, nc, 0, 0)),
+            pl.BlockSpec((1, 1, L, hd), lambda bh, nc: (bh, nc, 0, 0)),
+            pl.BlockSpec((1, 1, L, hd), lambda bh, nc: (bh, nc, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda bh, nc: (bh, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, nc: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, hd), lambda bh, nc: (bh, nc, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, nc: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, n_chunks, L, hd), r.dtype),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(rf, kf, vf, lwf, uf, s0f)
+    y = y.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    return y, sT.reshape(B, H, hd, hd)
+
+
+# ------------------------------------------------------------------ RG-LRU
+def _lru_kernel(a_ref, b_ref, h0_ref, y_ref, hT_ref, h_scr, *, L, n_chunks):
+    nc = pl.program_id(2)
+
+    @pl.when(nc == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (L, bd)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, pl.ds(t, 1), :] = h[None].astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, L, step, h_scr[0])
+    h_scr[...] = h[None]
+
+    @pl.when(nc == n_chunks - 1)
+    def _emit():
+        hT_ref[0] = h[None].astype(hT_ref.dtype)
+
+
+def lru_scan_chunked(a, b, h0, *, chunk: int = 128, block_d: int = 512, interpret: bool = False):
+    """a,b: (B,T,D); h0: (B,D) -> (hs: (B,T,D), hT: (B,D))."""
+    B, T, D = a.shape
+    L = min(chunk, T)
+    if T % L:
+        raise ValueError(f"T={T} not divisible by chunk={L}")
+    bd = min(block_d, D)
+    if D % bd:
+        raise ValueError(f"D={D} not divisible by block_d={bd}")
+    n_chunks = T // L
+    grid = (B, D // bd, n_chunks)
+    hs, hT = pl.pallas_call(
+        functools.partial(_lru_kernel, L=L, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, bd), lambda ib, id_, nc: (ib, nc, id_)),
+            pl.BlockSpec((1, L, bd), lambda ib, id_, nc: (ib, nc, id_)),
+            pl.BlockSpec((1, 1, bd), lambda ib, id_, nc: (ib, 0, id_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, bd), lambda ib, id_, nc: (ib, nc, id_)),
+            pl.BlockSpec((1, 1, bd), lambda ib, id_, nc: (ib, 0, id_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), a.dtype),
+            jax.ShapeDtypeStruct((B, 1, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b, h0.reshape(B, 1, D))
+    return hs, hT.reshape(B, D)

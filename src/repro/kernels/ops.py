@@ -1,0 +1,114 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Gradients: forward passes run the kernels; backward passes recompute through
+the jnp references via ``jax.custom_vjp`` (exact — the references are the
+oracles the kernels are validated against).  Writing fused backward kernels
+is listed as future work in DESIGN.md; the custom-vjp split keeps training
+correct on day one while the forward hot path uses the tuned kernels.
+
+All wrappers accept ``interpret=True`` so the kernel *bodies* execute on CPU
+for validation (this container has no TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_fwd
+from .flash_attention import flash_attention_fwd
+from .linear_scan import lru_scan_chunked, rwkv_scan_chunked
+from .matmul import matmul_tiled
+
+__all__ = ["flash_attention", "decode_attention", "rwkv_scan", "lru_scan", "matmul"]
+
+
+# ---------------------------------------------------------- flash attention
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, block_q, block_kv, interpret):
+    # q: (B,Sq,H,hd) layout; kernel wants (B,H,Sq,hd)
+    qt = q.transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(
+        qt, k, v, causal=causal, block_q=block_q, block_kv=block_kv, interpret=interpret
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_kv, interpret):
+    return _flash(q, k, v, causal, block_q, block_kv, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_kv, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_kv=128, interpret=False):
+    """q: (B,Sq,H,hd); k/v: (B,Kh,Skv,hd) -> (B,Sq,H,hd)."""
+    return _flash(q, k, v, causal, block_q, block_kv, interpret)
+
+
+# ---------------------------------------------------------- decode attention
+def decode_attention(q, k, v, valid, *, block_kv=512, interpret=False):
+    """Inference-only (no vjp needed). q: (B,H,hd); k/v: (B,Kh,S,hd);
+    valid: (B,S) int32."""
+    return decode_attention_fwd(q, k, v, valid, block_kv=block_kv, interpret=interpret)
+
+
+# ----------------------------------------------------------------- rwkv scan
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _rwkv(r, k, v, lw, u, s0, chunk, interpret):
+    return rwkv_scan_chunked(r, k, v, lw, u, s0, chunk=chunk, interpret=interpret)
+
+
+def _rwkv_fwd(r, k, v, lw, u, s0, chunk, interpret):
+    return _rwkv(r, k, v, lw, u, s0, chunk, interpret), (r, k, v, lw, u, s0)
+
+
+def _rwkv_bwd(chunk, interpret, res, g):
+    r, k, v, lw, u, s0 = res
+    _, vjp = jax.vjp(lambda *a: ref.rwkv_scan_ref(*a), r, k, v, lw, u, s0)
+    return vjp(g)
+
+
+_rwkv.defvjp(_rwkv_fwd, _rwkv_bwd)
+
+
+def rwkv_scan(r, k, v, lw, u, s0, *, chunk=64, interpret=False):
+    """Chunked WKV: r,k,v,lw (B,T,H,hd); u (H,hd); s0 (B,H,hd,hd)."""
+    return _rwkv(r, k, v, lw, u, s0, chunk, interpret)
+
+
+# ------------------------------------------------------------------ lru scan
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _lru(a, b, h0, chunk, interpret):
+    return lru_scan_chunked(a, b, h0, chunk=chunk, interpret=interpret)
+
+
+def _lru_fwd(a, b, h0, chunk, interpret):
+    return _lru(a, b, h0, chunk, interpret), (a, b, h0)
+
+
+def _lru_bwd(chunk, interpret, res, g):
+    a, b, h0 = res
+    _, vjp = jax.vjp(lambda *x: ref.lru_scan_ref(*x), a, b, h0)
+    return vjp(g)
+
+
+_lru.defvjp(_lru_fwd, _lru_bwd)
+
+
+def lru_scan(a, b, h0, *, chunk=128, interpret=False):
+    """First-order scan h_t = a_t h_{t-1} + b_t.  a,b: (B,T,D); h0: (B,D)."""
+    return _lru(a, b, h0, chunk, interpret)
+
+
+# -------------------------------------------------------------------- matmul
+def matmul(a, b, *, bm=256, bn=256, bk=256, interpret=False):
+    return matmul_tiled(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)

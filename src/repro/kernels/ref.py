@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernels are validated against in
+``tests/test_kernels.py`` (interpret=True on CPU, shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "rwkv_scan_ref",
+    "lru_scan_ref",
+    "matmul_ref",
+]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,Sq,H,hd), k/v: (B,Kh,Skv,hd) -> (B,Sq,H,hd).  GQA by grouping."""
+    B, Sq, H, hd = q.shape
+    Kh, Skv = k.shape[1], k.shape[2]
+    g = H // Kh
+    qh = q.reshape(B, Sq, Kh, g, hd)
+    s = jnp.einsum("bqkgh,bksh->bkgqs", qh, k, preferred_element_type=jnp.float32)
+    s = s * (1.0 / np.sqrt(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bksh->bqkgh", p, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def decode_attention_ref(q, k, v, length):
+    """Single-step decode: q: (B,H,hd); k/v: (B,Kh,S,hd); length: () int —
+    number of valid cache entries.  -> (B,H,hd)."""
+    B, H, hd = q.shape
+    Kh, S = k.shape[1], k.shape[2]
+    g = H // Kh
+    qh = q.reshape(B, Kh, g, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qh, k, preferred_element_type=jnp.float32)
+    s = s * (1.0 / np.sqrt(hd))
+    valid = jnp.arange(S) < length
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v)
+    return o.reshape(B, H, hd)
+
+
+def rwkv_scan_ref(r, k, v, lw, u, s0):
+    """Exact RWKV-6 WKV recurrence (see models.rwkv6.wkv_scan_ref)."""
+    from repro.models.rwkv6 import wkv_scan_ref as _impl
+
+    return _impl(r, k, v, lw, u, s0)
+
+
+def lru_scan_ref(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t (see models.rglru.lru_scan_ref)."""
+    from repro.models.rglru import lru_scan_ref as _impl
+
+    return _impl(a, b, h0)
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

@@ -1,0 +1,159 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_DRYRUN_DEVICES']}"
+    )
+
+"""§Perf hillclimbing: PATSMA (CSA, Entire-Execution mode, AnalyticCost)
+searching the distributed-config space of one (arch x shape) cell — the
+paper's own technique driving the roofline optimization.
+
+Each candidate = a (sharding x remat x chunking x capacity) configuration;
+its cost = the dominant roofline term of the freshly lowered cell (delta
+method).  Every evaluation is logged to JSONL so EXPERIMENTS.md §Perf can
+show the hypothesis -> change -> before/after trail.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch llama3_405b \
+        --shape train_4k --budget 10 --out results/hc_405b.jsonl
+"""
+import argparse
+import json
+import time
+
+from repro.core import CSA, Autotuning, ChoiceDim, SearchSpace
+from repro.launch.dryrun import run_cell
+
+# knob menus per shape kind
+TRAIN_KNOBS = [
+    ChoiceDim("attn_impl", ("xla", "flashcost")),  # flash kernel vs XLA attention
+    ChoiceDim("remat", ("none", "full")),
+    ChoiceDim("logits_chunk", (0, 4096, 16384)),
+    ChoiceDim("sp", (False, True)),  # sequence-parallel activations
+    ChoiceDim("fsdp", (True, False)),
+]
+MOE_KNOBS = [ChoiceDim("capacity_factor", (1.0, 1.25, 2.0))]
+DECODE_KNOBS = [
+    ChoiceDim("attn_impl", ("xla", "flashcost")),
+    ChoiceDim("fsdp", (True, False)),
+    ChoiceDim("logits_chunk", (0, 4096)),
+]
+
+
+def knob_space(cfg, shape_kind: str) -> SearchSpace:
+    dims = list(TRAIN_KNOBS if shape_kind != "decode" else DECODE_KNOBS)
+    if cfg.ffn == "moe" and shape_kind != "decode":
+        dims += MOE_KNOBS
+    return SearchSpace(dims)
+
+
+def evaluate(arch: str, shape: str, knobs: dict, *, multi_pod=False, objective="bound"):
+    exec_over = {}
+    cfg_over = {}
+    kw = {}
+    for k, v in knobs.items():
+        if k in ("remat", "logits_chunk", "scan_unroll", "rec_chunk", "attn_impl"):
+            exec_over[k] = v
+        elif k in ("capacity_factor",):
+            cfg_over[k] = v
+        elif k in ("fsdp", "sp", "microbatches"):
+            kw[k] = v
+    r = run_cell(
+        arch, shape, multi_pod=multi_pod, exec_overrides=exec_over,
+        cfg_overrides=cfg_over, verbose=False, **kw,
+    )
+    if r["status"] != "ok":
+        return float("inf"), r
+    rt = dict(r["roofline"])
+    if exec_over.get("attn_impl") == "flashcost":
+        # the surrogate lowering carries the kernel's true HBM/collective
+        # traffic; re-add the kernel's MXU flops analytically (DESIGN §10)
+        import dataclasses as _dc
+
+        from repro import configs as _c
+        from repro.launch import costing as _cost
+
+        cfg = _c.get(arch)
+        if cfg_over:
+            cfg = _dc.replace(cfg, **cfg_over)
+        shp = _c.SHAPES[shape]
+        mesh_shape = r["mesh"]
+        dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+        tp = mesh_shape.get("model", 1)
+        adj = _cost.attention_traffic(cfg, shp, dp, tp)
+        rt["flops"] = rt["flops"] + adj["flash_flops"]
+        rt["compute_s"] = rt["flops"] / 197e12
+        r["roofline"] = rt
+        r["flash_flops_added"] = adj["flash_flops"]
+    if objective == "bound":
+        cost = max(rt["compute_s"], rt["memory_s"], rt["collective_s"])
+    else:
+        cost = rt[objective + "_s"]
+    # HBM feasibility: argument bytes (params+opt+caches, exact under the
+    # candidate shardings) must fit v5e's 16 GB.  Without this penalty CSA
+    # happily "wins" by un-sharding weights (found in the first 405B sweep).
+    HBM = 16e9
+    args_b = r["memory"]["argument_bytes"]
+    if args_b > 0.95 * HBM:
+        r["infeasible"] = f"args {args_b/1e9:.1f} GB > HBM"
+        cost = cost + 1e6 * (args_b / HBM)
+    return cost, r
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--budget", type=int, default=10, help="CSA cost evaluations")
+    ap.add_argument("--objective", default="bound",
+                    choices=["bound", "compute", "memory", "collective"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--num-opt", type=int, default=3)
+    args = ap.parse_args()
+
+    from repro import configs
+
+    cfg = configs.get(args.arch)
+    shape_kind = configs.SHAPES[args.shape].kind
+    space = knob_space(cfg, shape_kind)
+    max_iter = max(2, args.budget // args.num_opt)
+    at = Autotuning(
+        space=space, ignore=0,
+        optimizer=CSA(len(space), num_opt=args.num_opt, max_iter=max_iter, seed=0),
+        cache=True, verbose=True,
+    )
+
+    log = []
+
+    def record(rec):
+        log.append(rec)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    n = 0
+    while not at.finished:
+        knobs = at.point
+        t0 = time.time()
+        cost, result = evaluate(args.arch, args.shape, knobs,
+                                multi_pod=args.multi_pod, objective=args.objective)
+        n += 1
+        rec = {
+            "eval": n, "knobs": knobs, "cost_s": cost,
+            "roofline": result.get("roofline"), "memory": result.get("memory"),
+            "status": result.get("status"), "elapsed_s": round(time.time() - t0, 1),
+            "arch": args.arch, "shape": args.shape,
+        }
+        record(rec)
+        print(f"[hc] eval {n}: {knobs} -> {cost*1e3:.1f} ms ({rec['elapsed_s']}s)")
+        at.exec(cost)
+
+    print(f"\n[hc] best: {at.best_point} -> {at.best_cost*1e3:.1f} ms "
+          f"({at.num_evals} evals, cache hits included)")
+    record({"final": True, "best_knobs": at.best_point, "best_cost_s": at.best_cost,
+            "arch": args.arch, "shape": args.shape})
+
+
+if __name__ == "__main__":
+    main()

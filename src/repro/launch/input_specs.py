@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.  The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ShapeSpec
+from repro.models import ExecConfig, Model, ModelConfig
+
+__all__ = ["train_inputs", "prefill_inputs", "decode_inputs", "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _batch_specs(cfg: ModelConfig, B: int, S: int, with_labels: bool) -> dict:
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.is_encdec:
+        batch["frames"] = _sds((B, cfg.ctx_tokens, cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "vlm":
+        batch["ctx_embeds"] = _sds((B, cfg.ctx_tokens, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    return _batch_specs(cfg, shape.global_batch, shape.seq_len, with_labels=True)
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    return _batch_specs(cfg, shape.global_batch, shape.seq_len, with_labels=False)
+
+
+def decode_inputs(model: Model, shape: ShapeSpec):
+    """(token, states, pos) specs; states via eval_shape of init_states —
+    ring-buffer windows and recurrent states get their true (small) shapes."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    states = jax.eval_shape(lambda: model.init_states(B, S, mode="decode"))
+    token = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return token, states, pos
+
+
+def input_specs(model: Model, shape_name: str):
+    cfg = model.cfg
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": train_inputs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_inputs(cfg, shape)}
+    token, states, pos = decode_inputs(model, shape)
+    return {"token": token, "states": states, "pos": pos}

@@ -1,0 +1,85 @@
+"""Serving launcher: batched prefill + decode with a KV cache and
+PATSMA-tuned decode fusion depth.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --tiny \
+        --batch 8 --prompt-len 32 --gen 64
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import Autotuning, CSA, ChoiceDim, SearchSpace
+from repro.models import ExecConfig, Model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="qwen2_7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--no-tune", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get_tiny(args.arch) if args.tiny else configs.get(args.arch)
+    model = Model(cfg, ExecConfig(rec_chunk=4))
+    params = model.init(jax.random.PRNGKey(0))
+    B, P = args.batch, args.prompt_len
+    max_len = P + args.gen
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab_size),
+             "max_len": max_len}
+    if cfg.is_encdec:
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.ctx_tokens, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["ctx_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.ctx_tokens, cfg.d_model))
+
+    t0 = time.perf_counter()
+    hidden, states = model.prefill(params, batch)
+    logits = model.logits(params, hidden[:, None])[:, 0]
+    token = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(token)
+    print(f"prefill {B}x{P}: {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+    def make_multi(k):
+        @jax.jit
+        def run(params, token, states, pos):
+            def body(carry, _):
+                token, states, pos = carry
+                lg, states = model.decode_step(params, token, states, pos)
+                nxt = jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+                return (nxt, states, pos + 1), nxt
+            (token, states, pos), toks = jax.lax.scan(
+                body, (token, states, pos), None, length=k)
+            return token, states, pos, toks
+        return run
+
+    space = SearchSpace([ChoiceDim("k", (1, 2, 4, 8))])
+    at = Autotuning(space=space, ignore=1,
+                    optimizer=CSA(1, num_opt=3, max_iter=4, seed=0), cache=True)
+    fns = {}
+    pos = jnp.int32(P)
+    emitted = 0
+    t0 = time.perf_counter()
+    while emitted < args.gen:
+        k = 1 if args.no_tune else at.point["k"]
+        k = min(k, args.gen - emitted)
+        fn = fns.setdefault(k, make_multi(k))
+        tc = time.perf_counter()
+        token, states, pos, toks = fn(params, token, states, pos)
+        jax.block_until_ready(toks)
+        if not args.no_tune:
+            at.exec((time.perf_counter() - tc) / k)
+        emitted += k
+    wall = time.perf_counter() - t0
+    print(f"decode: {emitted} tok/seq x {B} in {wall*1e3:.0f} ms "
+          f"({B*emitted/wall:.0f} tok/s); tuned k={at.best_point.get('k')}")
+
+
+if __name__ == "__main__":
+    main()

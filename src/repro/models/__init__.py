@@ -1,0 +1,5 @@
+"""repro.models — the architecture substrate shared by all 10 assigned archs."""
+from .config import ExecConfig, ModelConfig
+from .model import Model
+
+__all__ = ["Model", "ModelConfig", "ExecConfig"]

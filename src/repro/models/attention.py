@@ -1,0 +1,207 @@
+"""Attention: GQA/MQA/MHA, causal + sliding-window + cross, KV cache.
+
+Cache layout (per attention instance):
+    {"k": (B, Kh, W, hd), "v": (B, Kh, W, hd), "pos": (W,) int32}
+``W`` = window size for local-attention layers (ring buffer) else max
+sequence length.  ``pos`` holds the absolute position stored in each slot
+(-1 = empty), which drives causal/window masking uniformly across train /
+prefill / decode.  Batched serving advances all rows in lockstep (one shared
+position per step) — the standard batched-decode regime.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ExecConfig, ModelConfig
+from .layers import linear_apply, linear_init, rope_apply
+
+__all__ = ["attn_init", "attn_apply", "init_attn_cache", "cross_kv"]
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.d_head
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    return {
+        "wq": linear_init(kq, d, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": linear_init(kk, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": linear_init(kv, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": linear_init(ko, cfg.n_heads * hd, d),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, *, window: int = 0) -> dict:
+    w = min(window, max_len) if window > 0 else max_len
+    shape = (batch, cfg.n_kv_heads, w, cfg.d_head)
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def _mask(q_pos, kv_pos, *, causal: bool, window: int):
+    """(Sq, Skv) bool validity mask from absolute positions."""
+    valid = kv_pos[None, :] >= 0
+    if causal:
+        valid &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        valid &= q_pos[:, None] - kv_pos[None, :] < window
+    return valid
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """q: (B,Sq,H,hd), k/v: (B,Kh,Skv,hd), mask: (Sq,Skv) -> (B,Sq,H,hd).
+    fp32 softmax; GQA via head grouping."""
+    # NOTE (§Perf iteration 1, REFUTED hypothesis): explicit sharding
+    # constraints on the S² chain were tried here and changed nothing — A/B
+    # showed GSPMD already shards scores over (dp × heads); the term is big
+    # because S² itself is big.  The real fix is the flash kernel
+    # (kernels/flash_attention.py); see "flashcost" below for how the
+    # dry-run accounts for it.
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[1]
+    g = H // Kh
+    qh = q.reshape(B, Sq, Kh, g, hd)
+    scores = jnp.einsum("bqkgh,bksh->bkgqs", qh, k, preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / np.sqrt(hd))
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bksh->bqkgh", p, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _sdpa_flashcost(q, k, v) -> jnp.ndarray:
+    """Kernel-cost surrogate for dry-run lowering (attn_impl='flashcost').
+
+    Pallas cannot lower without a TPU, so §Perf candidates that run the flash
+    kernel lower THIS surrogate instead: it reads Q/K/V once and writes O
+    once — exactly the kernel's HBM traffic (the S² tile lives in VMEM) —
+    while the kernel's MXU FLOPs are re-added analytically
+    (costing.attention_traffic / flash_flops).  Not a numerics path: only
+    lowered for cost accounting.
+    """
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[1]
+    mk = jnp.mean(k, axis=2)  # (B,Kh,hd): touches all of K
+    mv = jnp.mean(v, axis=2)
+    g = H // Kh
+    mk = jnp.repeat(mk, g, axis=1)[:, None]  # (B,1,H,hd)
+    mv = jnp.repeat(mv, g, axis=1)[:, None]
+    return q * mk + mv
+
+
+def _sdpa_flash(q, k, v, *, causal: bool, exec_cfg: ExecConfig) -> jnp.ndarray:
+    """Pallas flash-attention path (train/prefill, no cache, full positions)."""
+    from repro.kernels import ops as kops
+
+    return kops.flash_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        block_q=exec_cfg.block_q,
+        block_kv=exec_cfg.block_kv,
+        interpret=exec_cfg.interpret,
+    )
+
+
+def cross_kv(cfg: ModelConfig, p: dict, ctx: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute cross-attention K/V from context embeddings (B,N,D)."""
+    B, N, _ = ctx.shape
+    k = linear_apply(p["wk"], ctx).reshape(B, N, cfg.n_kv_heads, cfg.d_head)
+    v = linear_apply(p["wv"], ctx).reshape(B, N, cfg.n_kv_heads, cfg.d_head)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,  # (Sq,) absolute positions of the query tokens
+    cache: Optional[dict] = None,
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn K/V
+    causal: bool = True,
+    window: int = 0,
+    rope: bool = True,
+    exec_cfg: ExecConfig = ExecConfig(),
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Self- or cross-attention with optional KV cache.
+
+    Modes:
+      * train/encode: ``cache=None, kv=None`` — full-sequence self-attention.
+      * prefill:      ``cache=empty`` — fills the cache, returns outputs.
+      * decode:       ``cache=filled``, Sq=1 — appends one step.
+      * cross:        ``kv=(k,v)`` precomputed from context; no cache update.
+    """
+    B, Sq, D = x.shape
+    H, Kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = linear_apply(p["wq"], x).reshape(B, Sq, H, hd)
+
+    if kv is not None:  # ---------------------------------------- cross-attn
+        k, v = kv
+        if exec_cfg.attn_impl == "flashcost":
+            out = _sdpa_flashcost(q, k, v)
+        else:
+            mask = jnp.ones((Sq, k.shape[2]), bool)
+            out = _sdpa(q, k, v, mask)
+        return linear_apply(p["wo"], out.reshape(B, Sq, H * hd)), cache
+
+    kc = linear_apply(p["wk"], x).reshape(B, Sq, Kh, hd)
+    vc = linear_apply(p["wv"], x).reshape(B, Sq, Kh, hd)
+    if rope:
+        q = rope_apply(q, q_pos, cfg.rope_theta)
+        kc = rope_apply(kc, q_pos, cfg.rope_theta)
+    kc = kc.transpose(0, 2, 1, 3)  # (B,Kh,Sq,hd)
+    vc = vc.transpose(0, 2, 1, 3)
+
+    if cache is None:  # ------------------------------------- train / encode
+        if exec_cfg.attn_impl == "pallas" and window == 0:
+            out = _sdpa_flash(q, kc, vc, causal=causal, exec_cfg=exec_cfg)
+        elif exec_cfg.attn_impl == "flashcost":
+            out = _sdpa_flashcost(q, kc, vc)
+        else:
+            mask = _mask(q_pos, q_pos, causal=causal, window=window)
+            out = _sdpa(q, kc, vc, mask)
+        return linear_apply(p["wo"], out.reshape(B, Sq, H * hd)), None
+
+    # ------------------------------------------------- prefill / decode step
+    W = cache["k"].shape[2]
+    if Sq > 1:
+        # prefill: attend over the in-flight full sequence (correct even when
+        # Sq > W), then persist only the last W entries into the ring.
+        if exec_cfg.attn_impl == "flashcost":
+            out = _sdpa_flashcost(q, kc, vc)
+        else:
+            mask = _mask(q_pos, q_pos, causal=causal, window=window)
+            out = _sdpa(q, kc, vc, mask)
+        if Sq > W:
+            kc, vc, q_pos = kc[:, :, Sq - W :], vc[:, :, Sq - W :], q_pos[Sq - W :]
+        slots = jnp.mod(q_pos, W)
+        new_cache = {
+            "k": cache["k"].at[:, :, slots].set(kc),
+            "v": cache["v"].at[:, :, slots].set(vc),
+            "pos": cache["pos"].at[slots].set(q_pos.astype(jnp.int32)),
+        }
+        return linear_apply(p["wo"], out.reshape(B, Sq, H * hd)), new_cache
+
+    # decode: append one step into the ring, attend over the cache
+    slots = jnp.mod(q_pos, W)
+    new_cache = {
+        "k": cache["k"].at[:, :, slots].set(kc),
+        "v": cache["v"].at[:, :, slots].set(vc),
+        "pos": cache["pos"].at[slots].set(q_pos.astype(jnp.int32)),
+    }
+    if exec_cfg.attn_impl == "flashcost":
+        out = _sdpa_flashcost(q, new_cache["k"], new_cache["v"])
+    else:
+        mask = _mask(q_pos, new_cache["pos"], causal=causal, window=window)
+        out = _sdpa(q, new_cache["k"], new_cache["v"], mask)
+    return linear_apply(p["wo"], out.reshape(B, Sq, H * hd)), new_cache

@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-factor scatter dispatch.
+
+GShard-style capacity dispatch expressed with scatter/gather (not the giant
+(T,E,C) one-hot einsum — the scatter form keeps the dispatch buffer at
+(E, C, D), which shards as E→model (EP), C→data).  Tokens beyond an expert's
+capacity are dropped (standard).  ``capacity_factor`` is a PATSMA-tunable.
+
+Arctic variant (``moe_dense_residual``): a dense SwiGLU FFN runs in parallel
+with the MoE and the outputs add (Snowflake Arctic's dense-MoE hybrid).
+Router aux loss (Switch load-balance) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _nrm, ffn_apply, ffn_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(rng, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    kr, ki, kg, ko, kd = jax.random.split(rng, 5)
+    p = {
+        "router": _nrm(kr, (d, e), 1.0 / np.sqrt(d)),
+        "wi": _nrm(ki, (e, d, f), 1.0 / np.sqrt(d)),
+        "wg": _nrm(kg, (e, d, f), 1.0 / np.sqrt(d)),
+        "wo": _nrm(ko, (e, f, d), 1.0 / np.sqrt(f)),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = ffn_init(kd, "swiglu", d, cfg.d_ff)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    dt = x.dtype
+    xt = x.reshape(T, D)
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)  # (T,K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Switch load-balance aux loss: E * mean(f_e * P_e)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = E * jnp.sum(me * ce)
+
+    # ---- capacity + position within expert ---------------------------------
+    # Decode/small batches run drop-free (serving must not drop tokens); large
+    # token counts use the standard capacity factor (PATSMA-tunable).
+    C = int(np.ceil(T * K / E * cfg.capacity_factor))
+    if T * K <= 8192:
+        C = T * K
+    flat_e = eidx.reshape(T * K)  # assignment order: token-major, slot-minor
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # running count per expert
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # (T*K,)
+    keep = pos_in_e < C
+    slot = jnp.minimum(pos_in_e, C - 1)
+
+    # ---- dispatch: scatter tokens into (E, C, D) ----------------------------
+    from repro.parallel.api import constrain
+
+    xr = jnp.repeat(xt[:, None, :], K, axis=1).reshape(T * K, D)
+    contrib = jnp.where(keep[:, None], xr, jnp.zeros_like(xr))
+    buf = jnp.zeros((E, C, D), dt).at[flat_e, slot].add(contrib)
+    buf = constrain(buf, ("ep", "dp", None))  # EP: experts over model axis
+
+    # ---- expert FFN (SwiGLU), batched over E --------------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dt))) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wi"].astype(dt)
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))  # (E,C,D)
+
+    # ---- combine: gather back + weighted sum over K -------------------------
+    yr = out[flat_e, slot]  # (T*K, D)
+    yr = yr * (gate.reshape(T * K, 1).astype(dt) * keep[:, None].astype(dt))
+    y = jnp.sum(yr.reshape(T, K, D), axis=1)
+
+    if cfg.moe_dense_residual:
+        y = y + ffn_apply("swiglu", p["dense"], xt)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,87 @@
+"""Optimizer substrate: AdamW (dtype-configurable states), schedules, clipping.
+
+Pure-JAX (no optax in this environment).  ``state_dtype='bfloat16'`` halves
+optimizer memory — used by the 405B/480B dry-run cells (recorded in
+EXPERIMENTS.md); fp32 is the default."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_schedule", "clip_by_global_norm", "global_norm"]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable  # step -> lr  (or a float)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Optional[str] = None  # None -> follow param dtype ("float32"/"bfloat16")
+    clip_norm: float = 1.0
+
+    def _sdt(self, p):
+        return jnp.dtype(self.state_dtype) if self.state_dtype else p.dtype
+
+    def init(self, params) -> dict:
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, self._sdt(p)), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, self._sdt(p)), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.clip_norm > 0:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            mh = mf / c1
+            vh = vf / c2
+            step_ = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * step_
+            return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}, {
+            "grad_norm": gnorm,
+            "lr": jnp.asarray(lr, jnp.float32),
+        }

@@ -1,0 +1,2 @@
+"""Distribution: logical-axis sharding (DP/FSDP/TP/EP/SP), pipeline, collectives."""
+from .api import ShardingRules, constrain, logical_spec, sharding_context

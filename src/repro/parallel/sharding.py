@@ -1,0 +1,155 @@
+"""Parameter / batch / cache sharding rules (DP + FSDP/ZeRO-3 + TP + EP).
+
+``param_wanted(path, shape)`` returns logical axes per dim (see api.py);
+``tree_shardings`` converts a ShapeDtypeStruct tree into NamedShardings with
+divisibility guards (heads that don't divide the model axis replicate —
+e.g. qwen2's 28 heads on a 16-way axis shard via the fused H*hd dim of the
+projection instead; GSPMD propagates internally).
+"""
+from __future__ import annotations
+
+import re
+from typing import Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .api import ShardingRules, logical_spec
+
+__all__ = ["param_wanted", "batch_wanted", "state_wanted", "tree_shardings", "path_str"]
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _stacked(path: str) -> bool:
+    return path.startswith("stages/") or path.startswith("encoder/stages/")
+
+
+def _ndim(shape_or_ndim) -> int:
+    return shape_or_ndim if isinstance(shape_or_ndim, int) else len(shape_or_ndim)
+
+
+def param_wanted(path: str, shape) -> Tuple:
+    """Logical placement per dim for a parameter leaf."""
+    ndim = _ndim(shape)
+    base_ndim = ndim - 1 if _stacked(path) else ndim
+
+    def out(*axes):
+        axes = tuple(axes) + (None,) * (base_ndim - len(axes))
+        return ((None,) + axes) if _stacked(path) else axes
+
+    # --- embeddings / head ---
+    if re.search(r"embed/table$", path):
+        return out("tp", "fsdp")
+    if re.search(r"lm_head/w$", path):
+        return out("fsdp", "tp")
+    # --- attention ---
+    if re.search(r"(attn|xattn)/w[qkv]/w$", path):
+        return out("fsdp", "tp")
+    if re.search(r"(attn|xattn)/w[qkv]/b$", path):
+        return out("tp")
+    if re.search(r"(attn|xattn)/wo/w$", path):
+        return out("tp", "fsdp")
+    # --- MoE experts (E, D, F) / (E, F, D); router (D, E) ---
+    if re.search(r"ffn/(wi|wg)$", path) and base_ndim == 3:
+        return out("ep", "fsdp", None)
+    if re.search(r"ffn/wo$", path) and base_ndim == 3:
+        return out("ep", None, "fsdp")
+    if re.search(r"ffn/router$", path):
+        return out("fsdp", None)
+    # --- dense FFN (incl. arctic dense residual under ffn/dense/) ---
+    if re.search(r"(ffn|dense|cm)/(wi|wg|wk)$", path) and base_ndim == 2:
+        return out("fsdp", "tp")
+    if re.search(r"(ffn|dense|cm)/(wo|wv)$", path) and base_ndim == 2:
+        return out("tp", "fsdp")
+    if re.search(r"ffn/bi$", path):
+        return out("tp")
+    # --- rwkv time-mix ---
+    if re.search(r"tm/(wr|wk|wv|wg)$", path):
+        return out("fsdp", "tp")
+    if re.search(r"tm/wo$", path):
+        return out("tp", "fsdp")
+    if re.search(r"(tm/w1|tm/mix_w1|cm/wr)$", path):
+        return out("fsdp", None) if "w1" in path else out("fsdp", "tp")
+    if re.search(r"tm/w2$", path):
+        return out(None, "fsdp")
+    # --- rglru ---
+    if re.search(r"rec/(wx_gelu|wx_rec|wa|wi)$", path):
+        return out("fsdp", "tp")
+    if re.search(r"rec/wo$", path):
+        return out("tp", "fsdp")
+    if re.search(r"rec/conv_w$", path):
+        return out(None, "tp")
+    if re.search(r"rec/(lam|ba|bi|conv_b)$", path):
+        return out("tp")
+    # --- everything else (norms, small LoRAs, u, biases): replicated ---
+    return out()
+
+
+def batch_wanted(name: str, shape) -> Tuple:
+    ndim = _ndim(shape)
+    if name in ("tokens", "labels"):
+        return ("dp", "sp")[:ndim] if ndim == 2 else ("dp",) + (None,) * (ndim - 1)
+    if name in ("frames", "ctx_embeds"):
+        return ("dp", None, None)
+    return ("dp",) + (None,) * (ndim - 1)
+
+
+def state_wanted(path: str, shape, tp_size: int = 0) -> Tuple:
+    """Decode caches / recurrent states (leading dim = group stack).
+
+    KV caches prefer head sharding; when the KV head count does not divide
+    the model axis (GQA kv=8 on a 16-way axis) the cache's *sequence* dim is
+    sharded instead — the sharded-KV / flash-decode layout (the softmax over
+    the sharded axis becomes two small all-reduces, handled by GSPMD).  This
+    is what keeps e.g. llama3-405B decode_32k at ~9 GB/chip instead of 138."""
+    ndim = _ndim(shape)
+
+    def out(*axes):
+        axes = tuple(axes) + (None,) * (ndim - 1 - len(axes))
+        return (None,) + axes
+
+    if re.search(r"/(k|v|xk|xv)$", path):  # (ng, B, Kh, W, hd)
+        if (
+            tp_size
+            and not isinstance(shape, int)
+            and shape[2] % tp_size != 0
+            and shape[3] % tp_size == 0
+        ):
+            return out("dp", None, "tp", None)  # sharded-sequence KV
+        return out("dp", "tp", None, None)
+    if path.endswith("/pos"):  # (ng, W)
+        return out()
+    if path.endswith("/wkv"):  # (ng, B, H, hd, hd)
+        return out("dp", "tp", None, None)
+    if re.search(r"/(shift_tm|shift_cm|h)$", path):  # (ng, B, D)
+        return out("dp", "tp")
+    if path.endswith("/conv"):  # (ng, B, W-1, dr)
+        return out("dp", None, "tp")
+    return out()
+
+
+def tree_shardings(mesh, rules: ShardingRules, tree, wanted_fn) -> object:
+    """Map a ShapeDtypeStruct (or array) pytree to NamedShardings."""
+
+    def leaf(path, x):
+        p = path_str(path)
+        wanted = wanted_fn(p, tuple(x.shape))
+        spec = logical_spec(mesh, rules, x.shape, wanted)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, PartitionSpec()), tree)

@@ -1,0 +1,4 @@
+"""Runtime: fault-tolerant training driver, watchdog, elastic restore."""
+from .driver import TrainJob, Watchdog
+
+__all__ = ["TrainJob", "Watchdog"]

@@ -1,0 +1,160 @@
+"""Fault-tolerant training driver.
+
+Wires together the substrates: data pipeline, train step, checkpointing
+(async, atomic, keep-k), PATSMA auto-tuning of step knobs (Single-Iteration
+mode riding the training loop — paper Fig. 1a), and the step-time watchdog
+that calls ``Autotuning.reset(level)`` when the environment drifts
+(straggler mitigation: the paper's reset semantics at datacenter scale).
+
+Crash/preemption recovery: the driver resumes from the newest complete
+checkpoint; the data pipeline is a pure function of (seed, step) so the
+replayed trajectory is bit-identical (asserted in tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.core import LogIntDim, SearchSpace, TunedStep
+from repro.core.space import ChoiceDim, IntDim
+from repro.data import make_batch_for
+from repro.models import ExecConfig, Model
+from repro.optim import AdamW, cosine_schedule
+from repro.train import make_train_step
+
+__all__ = ["TrainJob", "Watchdog"]
+
+
+class Watchdog:
+    """EWMA step-time monitor.  ``check`` returns an escalation level when the
+    current step time drifts beyond ``factor``× the smoothed time (0 = fine)."""
+
+    def __init__(self, factor: float = 1.8, alpha: float = 0.2, warmup: int = 3):
+        self.factor = factor
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.events: list = []
+
+    def check(self, dt: float, step: int) -> int:
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return 0
+        level = 0
+        if self.n > self.warmup and dt > self.factor * self.ewma:
+            level = 1 if dt < 2 * self.factor * self.ewma else 2
+            self.events.append({"step": step, "dt": dt, "ewma": self.ewma, "level": level})
+        # don't fold outliers into the smoothed estimate
+        if level == 0:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return level
+
+
+@dataclasses.dataclass
+class TrainJob:
+    arch: str = "qwen2_7b"
+    tiny: bool = True
+    steps: int = 50
+    global_batch: int = 8
+    seq_len: int = 64
+    lr: float = 1e-3
+    warmup: int = 10
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 20
+    ckpt_keep: int = 2
+    ckpt_async: bool = True
+    # PATSMA integration (Single Iteration mode over step knobs)
+    tune: bool = False
+    tune_microbatches: tuple = (1, 2, 4)
+    tune_max_iter: int = 4
+    tune_num_opt: int = 3
+    ignore: int = 1
+    watchdog_factor: float = 1.8
+    exec_cfg: ExecConfig = dataclasses.field(default_factory=lambda: ExecConfig(rec_chunk=8))
+    # test hooks
+    delay_hook: Optional[Callable[[int], None]] = None
+
+    def build(self):
+        cfg = configs.get_tiny(self.arch) if self.tiny else configs.get(self.arch)
+        model = Model(cfg, self.exec_cfg)
+        opt = AdamW(lr=cosine_schedule(self.lr, self.warmup, self.steps))
+        params = model.init(jax.random.PRNGKey(self.seed))
+        opt_state = opt.init(params)
+        return cfg, model, opt, params, opt_state
+
+    def run(self, on_step: Optional[Callable] = None) -> dict:
+        cfg, model, opt, params, opt_state = self.build()
+        start_step = 0
+        ckpt = CheckpointManager(self.ckpt_dir, keep=self.ckpt_keep) if self.ckpt_dir else None
+        if ckpt is not None and ckpt.latest_step() is not None:
+            (params, opt_state), step_loaded, _ = ckpt.restore((params, opt_state))
+            start_step = step_loaded + 1
+
+        def factory(microbatches=1):
+            return jax.jit(
+                make_train_step(model, opt, microbatches=microbatches),
+                donate_argnums=(0, 1),
+            )
+
+        tuned: Optional[TunedStep] = None
+        if self.tune:
+            valid_mbs = tuple(
+                m for m in self.tune_microbatches if self.global_batch % m == 0
+            ) or (1,)
+            space = SearchSpace([ChoiceDim("microbatches", valid_mbs)])
+            tuned = TunedStep(
+                factory,
+                space,
+                ignore=self.ignore,
+                num_opt=self.tune_num_opt,
+                max_iter=self.tune_max_iter,
+                cache=True,
+                seed=self.seed,
+            )
+        else:
+            step_fn = factory()
+
+        watchdog = Watchdog(factor=self.watchdog_factor)
+        history = {"loss": [], "step_time": [], "resets": [], "steps": []}
+        for step in range(start_step, self.steps):
+            batch = make_batch_for(cfg, self.global_batch, self.seq_len, step, self.seed)
+            t0 = time.perf_counter()
+            if self.delay_hook is not None:
+                self.delay_hook(step)  # inside the timed window (straggler sim)
+            if tuned is not None:
+                params, opt_state, metrics = tuned(params, opt_state, batch)
+            else:
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            level = watchdog.check(dt, step)
+            if level and tuned is not None and tuned.finished:
+                # environment drift: re-enter tuning (paper reset semantics)
+                tuned.reset(level - 1)
+                history["resets"].append({"step": step, "level": level - 1})
+            history["loss"].append(float(metrics["loss"]))
+            history["step_time"].append(dt)
+            history["steps"].append(step)
+            if on_step is not None:
+                on_step(step, metrics)
+            if ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                payload = (params, opt_state)
+                if self.ckpt_async:
+                    ckpt.save_async(step, payload, extra={"loss": float(metrics["loss"])})
+                else:
+                    ckpt.save(step, payload, extra={"loss": float(metrics["loss"])})
+        if ckpt is not None:
+            ckpt.wait()
+            ckpt.save(self.steps - 1, (params, opt_state))
+        history["final_knobs"] = tuned.best_knobs if tuned is not None else {}
+        history["watchdog_events"] = watchdog.events
+        return history

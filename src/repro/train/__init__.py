@@ -1,0 +1,12 @@
+"""Training substrate: losses, step builders (driver lives in repro.runtime)."""
+from .loss import make_loss_fn, xent_chunked, xent_full
+from .step import make_decode_step, make_prefill_step, make_train_step
+
+__all__ = [
+    "make_loss_fn",
+    "xent_full",
+    "xent_chunked",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+]

@@ -1,0 +1,85 @@
+"""Cross-entropy loss: full and vocab-chunked (streaming logsumexp) paths.
+
+The chunked path never materializes the (B, S, V) logits tensor — it scans
+over vocab chunks of the LM head with an online-softmax accumulator.  For
+V=128k–256k at 1M tokens this is the difference between ~0.5–2 TB of logits
+and a (B, S, chunk) working set; ``logits_chunk`` is a PATSMA-tunable knob.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["xent_full", "xent_chunked", "make_loss_fn"]
+
+
+def _label_logit(h, w, labels):
+    """h: (B,S,D), w: (D,V), labels: (B,S) -> (B,S) fp32 logits at the labels."""
+    wl = jnp.take(w, labels, axis=1)  # (D,B,S) gather of label columns
+    return jnp.einsum("bsd,dbs->bs", h.astype(jnp.float32), wl.astype(jnp.float32))
+
+
+def xent_full(h, w, labels, valid=None):
+    """Standard CE over the full vocabulary.  Returns (mean_loss, n_tokens)."""
+    logits = (h @ w.astype(h.dtype)).astype(jnp.float32)  # (B,S,V)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_tok = lse - ll
+    if valid is None:
+        valid = jnp.ones_like(labels, jnp.float32)
+    n = jnp.maximum(jnp.sum(valid), 1.0)
+    return jnp.sum(per_tok * valid) / n, n
+
+
+def xent_chunked(h, w, labels, valid=None, chunk: int = 8192):
+    """Streaming-logsumexp CE over vocab chunks of the head weights.
+
+    w is reshaped to (n_chunks, D, chunk) and scanned; the accumulator keeps
+    the per-token running (max, sumexp)."""
+    B, S, D = h.shape
+    V = w.shape[1]
+    if V % chunk:
+        raise ValueError(f"vocab {V} not divisible by logits_chunk {chunk}")
+    nc = V // chunk
+    wc = w.reshape(D, nc, chunk).transpose(1, 0, 2)  # (nc, D, chunk)
+    hf = h
+
+    def body(carry, wck):
+        m, s = carry
+        lg = (hf @ wck.astype(hf.dtype)).astype(jnp.float32)  # (B,S,chunk)
+        cm = jnp.max(lg, axis=-1)
+        nm = jnp.maximum(m, cm)
+        s = s * jnp.exp(m - nm) + jnp.sum(jnp.exp(lg - nm[..., None]), axis=-1)
+        return (nm, s), None
+
+    m0 = jnp.full((B, S), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, S), jnp.float32)
+    (m, s), _ = jax.lax.scan(body, (m0, s0), wc)
+    lse = m + jnp.log(s)
+    ll = _label_logit(h, w, labels)
+    per_tok = lse - ll
+    if valid is None:
+        valid = jnp.ones_like(labels, jnp.float32)
+    n = jnp.maximum(jnp.sum(valid), 1.0)
+    return jnp.sum(per_tok * valid) / n, n
+
+
+def make_loss_fn(model, aux_weight: float = 0.01, logits_chunk: int = 0):
+    """(params, batch) -> (loss, metrics).  batch: tokens/labels (+ctx inputs).
+    Labels >= vocab_size (pad) are masked out; the vocab-pad columns never
+    receive labels so gradients there are exactly the softmax pull-down."""
+
+    def loss_fn(params, batch):
+        hidden, aux = model.forward(params, batch)
+        w = model.head_weights(params)
+        labels = batch["labels"]
+        valid = (labels >= 0) & (labels < model.cfg.vocab_size)
+        labels = jnp.clip(labels, 0, model.cfg.vocab_size - 1)
+        if logits_chunk and w.shape[1] % logits_chunk == 0:
+            ce, n = xent_chunked(hidden, w, labels, valid.astype(jnp.float32), logits_chunk)
+        else:
+            ce, n = xent_full(hidden, w, labels, valid.astype(jnp.float32))
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "aux": aux, "tokens": n}
+
+    return loss_fn

@@ -1,0 +1,80 @@
+"""Train/serve step builders.
+
+``make_train_step`` supports gradient-accumulation microbatching (the
+accumulation loop is a lax.scan whose per-microbatch DP all-reduce XLA
+overlaps with the next microbatch's compute — the overlap trick from
+DESIGN §7; ``microbatches`` is a PATSMA-tunable).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamW
+from .loss import make_loss_fn
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        if b % n:
+            raise ValueError(f"batch {b} not divisible by microbatches {n}")
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    *,
+    microbatches: int = 1,
+    logits_chunk: int = 0,
+    aux_weight: float = 0.01,
+):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model, aux_weight=aux_weight, logits_chunk=logits_chunk)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = _split_microbatches(batch, microbatches)
+
+            def body(acc, mbatch):
+                (l, m), g = grad_fn(params, mbatch)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l), m
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(body, (zero_g, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(model):
+    def prefill(params, batch):
+        hidden, states = model.prefill(params, batch)
+        logits = model.logits(params, hidden[:, None])[:, 0]
+        return logits, states
+
+    return prefill
+
+
+def make_decode_step(model):
+    def decode(params, token, states, pos):
+        return model.decode_step(params, token, states, pos)
+
+    return decode

@@ -1,0 +1,244 @@
+"""Autotuning driver tests — execution modes (paper Fig. 1, §2.3/§2.4)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CSA,
+    Autotuning,
+    GridSearch,
+    IntDim,
+    LogIntDim,
+    NelderMead,
+    SearchSpace,
+    TunedStep,
+)
+
+
+def test_eq1_measurement_count():
+    """num_eval = max_iter * (ignore + 1) * num_opt (paper Eq. 1)."""
+    for ignore, m, it in [(0, 4, 10), (1, 3, 7), (2, 5, 4)]:
+        at = Autotuning(1, 32, ignore=ignore, dim=1, num_opt=m, max_iter=it)
+        at.entire_exec(lambda p: (p - 9) ** 2)
+        assert at.num_measurements == it * (ignore + 1) * m
+
+
+def test_eq2_measurement_count():
+    """num_eval = max_iter * (ignore + 1) (paper Eq. 2, Nelder–Mead)."""
+    for ignore, it in [(0, 25), (1, 12), (3, 6)]:
+        nm = NelderMead(dim=1, error=0.0, max_iter=it)
+        at = Autotuning(1, 64, ignore=ignore, optimizer=nm)
+        at.entire_exec(lambda p: abs(p - 20))
+        assert at.num_measurements == it * (ignore + 1)
+
+
+def test_entire_exec_finds_optimum():
+    at = Autotuning(1, 16, ignore=0, dim=1, num_opt=4, max_iter=30, seed=0)
+    at.entire_exec(lambda p: (p - 7) ** 2 + 1.0)
+    assert at.finished
+    assert at.best_point == {"p0": 7}
+    assert at.point == {"p0": 7}  # final solution exposed as current point
+
+
+def test_single_mode_rides_the_loop():
+    """Single Iteration mode: tuning completes inside the natural loop, then
+    the final solution is used for the remaining iterations (Fig. 1a)."""
+    at = Autotuning(1, 8, ignore=0, dim=1, num_opt=3, max_iter=8, seed=1)
+    used_after_end = set()
+    for _ in range(200):
+        cost = at.single_exec(lambda p: (p - 3) ** 2)
+        if at.finished:
+            used_after_end.add(at.point["p0"])
+    assert at.finished
+    assert used_after_end == {3}
+
+
+def test_single_vs_entire_equivalence():
+    """On a deterministic cost, both modes see identical cost sequences and
+    reach the same final point."""
+    def cost(p):
+        return (p - 11) ** 2 * 0.5 + 2.0
+
+    a = Autotuning(1, 32, ignore=0, dim=1, num_opt=4, max_iter=15, seed=5)
+    a.entire_exec(cost)
+    b = Autotuning(1, 32, ignore=0, dim=1, num_opt=4, max_iter=15, seed=5)
+    while not b.finished:
+        b.single_exec(cost)
+    assert a.point == b.point
+    assert [c for _, c in a.history] == [c for _, c in b.history]
+
+
+def test_ignore_discards_stabilization_iters():
+    """With ignore=k the first k costs per candidate are discarded; the
+    delivered cost is the (k+1)-th measurement (compile-absorption in JAX)."""
+    seen = []
+
+    class SpyOpt(CSA):
+        def run(self, cost):
+            if np.isfinite(cost):
+                seen.append(cost)
+            return super().run(cost)
+
+    at = Autotuning(1, 4, ignore=2, optimizer=SpyOpt(1, num_opt=2, max_iter=3))
+    calls = {"n": 0}
+
+    def cost(p):
+        calls["n"] += 1
+        # first two calls per candidate return garbage; third the true cost
+        return 1000.0 if calls["n"] % 3 != 0 else float(p)
+
+    at.entire_exec(cost)
+    assert all(c != 1000.0 for c in seen)
+
+
+def test_runtime_mode_measures_wall_time():
+    """start()/end() brackets measure real elapsed time -> tuner finds the
+    faster branch."""
+    at = Autotuning(0, 1, ignore=0, dim=1, num_opt=4, max_iter=12, seed=3)
+    while not at.finished:
+        p = at.start()
+        if p["p0"] == 1:
+            time.sleep(0.004)  # slow configuration
+        time.sleep(0.0005)
+        at.end()
+    assert at.best_point["p0"] == 0
+
+
+def test_runtime_mode_blocks_on_jax():
+    """end(result) must block on async JAX work before timing."""
+    x = jnp.ones((256, 256))
+
+    @jax.jit
+    def heavy(x):
+        for _ in range(8):
+            x = x @ x.T / 256.0
+        return x
+
+    @jax.jit
+    def light(x):
+        return x + 1.0
+
+    heavy(x).block_until_ready()
+    light(x).block_until_ready()
+    at = Autotuning(0, 1, ignore=1, dim=1, num_opt=4, max_iter=10, seed=0)
+    while not at.finished:
+        p = at.start()
+        out = heavy(x) if p["p0"] == 1 else light(x)
+        at.end(out)
+    assert at.best_point["p0"] == 0
+
+
+def test_exec_user_cost_mode():
+    """exec(point, cost) — the library as a plain staged optimizer (§2.4)."""
+    at = Autotuning(-10, 10, ignore=0, dim=2, num_opt=4, max_iter=25, seed=2)
+    p = at.point
+    while not at.finished:
+        cost = (p["p0"] - 4) ** 2 + (p["p1"] + 6) ** 2
+        p = at.exec(cost)
+    assert at.best_point == {"p0": 4, "p1": -6}
+
+
+def test_cache_skips_repeat_measurements():
+    calls = {"n": 0}
+
+    def cost(p):
+        calls["n"] += 1
+        return (p - 2) ** 2
+
+    at = Autotuning(1, 4, ignore=0, dim=1, num_opt=4, max_iter=50, seed=0, cache=True)
+    at.entire_exec(cost)
+    assert calls["n"] <= 4  # only 4 distinct candidates exist
+    assert at.best_point["p0"] == 2
+
+
+def test_reset_reenters_tuning():
+    at = Autotuning(1, 16, ignore=0, dim=1, num_opt=3, max_iter=6, seed=0)
+    at.entire_exec(lambda p: (p - 5) ** 2)
+    assert at.finished
+    at.reset(0)
+    assert not at.finished
+    at.entire_exec(lambda p: (p - 12) ** 2)  # environment changed
+    assert at.best_point["p0"] in (5, 12)  # best over both phases retained at level 0
+    at.reset(2)
+    at.entire_exec(lambda p: (p - 12) ** 2)
+    assert at.best_point["p0"] == 12
+
+
+def test_grid_search_through_autotuning():
+    at = Autotuning(0, 9, ignore=0, optimizer=GridSearch(1, points_per_dim=10))
+    at.entire_exec(lambda p: abs(p - 6))
+    assert at.best_point["p0"] == 6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    lo=st.integers(-20, 0),
+    width=st.integers(1, 40),
+    seed=st.integers(0, 500),
+    ignore=st.integers(0, 2),
+)
+def test_property_points_always_within_user_bounds(lo, width, seed, ignore):
+    hi = lo + width
+    at = Autotuning(lo, hi, ignore=ignore, dim=2, num_opt=3, max_iter=6, seed=seed)
+
+    def cost(a, b):
+        assert lo <= a <= hi and lo <= b <= hi
+        return float(a * a + b * b)
+
+    at.entire_exec(cost)
+    assert lo <= at.best_point["p0"] <= hi
+
+
+# ---------------------------------------------------------------- TunedStep
+def test_tuned_step_single_iteration_mode():
+    """TunedStep tunes a static knob of a jitted step during the loop."""
+    space = SearchSpace([LogIntDim("block", 32, 256)])
+    compiles = []
+
+    def factory(block):
+        compiles.append(block)
+
+        @jax.jit
+        def step(x):
+            # emulate: smaller blocks do redundant work
+            reps = 256 // block
+            acc = x
+            for _ in range(reps):
+                acc = acc + jnp.tanh(x)
+            return acc
+
+        return step
+
+    ts = TunedStep(factory, space, ignore=1, num_opt=3, max_iter=6, seed=0)
+    x = jnp.ones((64, 64))
+    for _ in range(100):
+        out = ts(x)
+        if ts.finished:
+            break
+    assert ts.finished
+    # executable cache: at most one compile per distinct candidate
+    assert len(compiles) == len(set(compiles))
+
+
+def test_tuned_step_entire_mode_returns_best():
+    space = SearchSpace([IntDim("n", 1, 6)])
+
+    def factory(n):
+        @jax.jit
+        def step(x):
+            acc = x
+            for _ in range(n * 3):
+                acc = acc @ x
+            return acc
+
+        return step
+
+    ts = TunedStep(factory, space, ignore=1, num_opt=4, max_iter=8, seed=1)
+    best = ts.tune(jnp.eye(128))
+    assert ts.finished
+    assert 1 <= best["n"] <= 6

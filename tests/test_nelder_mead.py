@@ -1,0 +1,91 @@
+"""Nelder–Mead unit + property tests (paper §2.1/§2.3, Eq. 2)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import NelderMead
+
+
+def drive(opt, fn, cap=100_000):
+    z = opt.run(np.nan)
+    n = 0
+    while not opt.is_end() and n < cap:
+        z = opt.run(fn(z))
+        n += 1
+    return n
+
+
+def test_converges_on_quadratic():
+    opt = NelderMead(dim=4, error=1e-12, max_iter=500, seed=2)
+    drive(opt, lambda z: float(np.sum((z - 0.3) ** 2)))
+    assert opt.best_cost < 1e-8
+
+
+def test_rosenbrock():
+    def rosen(z):
+        x, y = z * 2
+        return float((1 - x) ** 2 + 100 * (y - x * x) ** 2)
+
+    opt = NelderMead(dim=2, error=1e-13, max_iter=800, seed=0)
+    drive(opt, rosen)
+    assert opt.best_cost < 1e-4
+
+
+def test_max_iter_caps_evaluations():
+    """Paper Eq. 2: max_iter counts cost evaluations for NM."""
+    opt = NelderMead(dim=3, error=0.0, max_iter=37, seed=1)
+    n = drive(opt, lambda z: float(np.sum(z**2)) + 1.0)
+    assert n == 37
+
+
+def test_error_stopping():
+    opt = NelderMead(dim=2, error=1e-3, max_iter=0, seed=1)  # unbounded evals
+    n = drive(opt, lambda z: float(np.sum(z**2)))
+    assert opt.is_end()
+    assert n < 500  # converged long before the cap
+
+
+def test_reset_levels():
+    opt = NelderMead(dim=2, error=1e-12, max_iter=100, seed=4)
+    drive(opt, lambda z: float(np.sum((z + 0.4) ** 2)))
+    best = opt.best_cost
+    opt.reset(0)
+    assert not opt.is_end()
+    assert opt.best_cost == best  # simplex rebuilt around the best
+    opt.reset(1)
+    assert not np.isfinite(opt.best_cost) or opt.evaluations == 0
+
+
+def test_final_solution_returned_after_end():
+    opt = NelderMead(dim=2, error=1e-9, max_iter=200, seed=5)
+    drive(opt, lambda z: float(np.sum(z**2)))
+    out = opt.run(123.0)
+    assert np.allclose(out, opt.best_solution)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(1, 6), cap=st.integers(5, 200), seed=st.integers(0, 999))
+def test_property_bounds_and_cap(dim, cap, seed):
+    opt = NelderMead(dim=dim, error=0.0, max_iter=cap, seed=seed)
+    z = opt.run(np.nan)
+    n = 0
+    while not opt.is_end():
+        assert z.shape == (dim,)
+        assert np.all(z >= -1.0) and np.all(z <= 1.0)
+        z = opt.run(float(np.sum((z - 0.1) ** 2)) + 1.0)
+        n += 1
+    assert n <= cap
+    assert np.isfinite(opt.best_cost)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_monotone_best(seed):
+    """best_cost is non-increasing over the run."""
+    opt = NelderMead(dim=3, error=0.0, max_iter=150, seed=seed)
+    z = opt.run(np.nan)
+    prev = np.inf
+    while not opt.is_end():
+        assert opt.best_cost <= prev + 1e-15
+        prev = opt.best_cost
+        z = opt.run(float(np.sum(np.abs(z - 0.25))))

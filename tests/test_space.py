@@ -1,0 +1,99 @@
+"""SearchSpace codec tests (incl. hypothesis round-trip properties)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ChoiceDim, FloatDim, IntDim, LogIntDim, SearchSpace
+
+
+def test_uniform_matches_paper_ctor():
+    sp = SearchSpace.uniform(1, 512, dim=2, integer=True)
+    lo = sp.decode(np.array([-1.0, -1.0]))
+    hi = sp.decode(np.array([1.0, 1.0]))
+    assert lo == {"p0": 1, "p1": 1}
+    assert hi == {"p0": 512, "p1": 512}
+
+
+def test_uniform_per_dim_bounds():
+    sp = SearchSpace.uniform([1, 10], [4, 20], dim=2)
+    assert sp.decode(np.array([-1, -1.0])) == {"p0": 1, "p1": 10}
+    assert sp.decode(np.array([1, 1.0])) == {"p0": 4, "p1": 20}
+
+
+def test_logint_grid():
+    d = LogIntDim("blk", 16, 512)
+    vals = {d.decode(z) for z in np.linspace(-1, 1, 101)}
+    assert vals == {16, 32, 64, 128, 256, 512}
+
+
+def test_choice_dim():
+    d = ChoiceDim("policy", ("none", "dots", "full"))
+    assert d.decode(-1.0) == "none"
+    assert d.decode(0.0) == "dots"
+    assert d.decode(1.0) == "full"
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError):
+        SearchSpace([IntDim("a", 0, 1), IntDim("a", 0, 1)])
+
+
+def test_empty_space_rejected():
+    with pytest.raises(ValueError):
+        SearchSpace([])
+
+
+def test_dim_mismatch_rejected():
+    sp = SearchSpace([IntDim("a", 0, 3)])
+    with pytest.raises(ValueError):
+        sp.decode(np.zeros(2))
+
+
+@settings(max_examples=100, deadline=None)
+@given(z=st.lists(st.floats(-1.0, 1.0), min_size=4, max_size=4))
+def test_property_decode_encode_fixpoint(z):
+    """decode -> encode -> decode is a fixpoint (idempotent codec)."""
+    sp = SearchSpace(
+        [
+            IntDim("a", -5, 17),
+            FloatDim("b", 0.0, 2.5),
+            LogIntDim("c", 8, 1024),
+            ChoiceDim("d", ("x", "y", "z", "w")),
+        ]
+    )
+    v1 = sp.decode(np.array(z))
+    v2 = sp.decode(sp.encode(v1))
+    assert v1["a"] == v2["a"]
+    assert v1["c"] == v2["c"]
+    assert v1["d"] == v2["d"]
+    assert abs(v1["b"] - v2["b"]) < 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    z=st.floats(-1.0, 1.0),
+    lo=st.integers(-100, 50),
+    width=st.integers(0, 200),
+)
+def test_property_int_in_bounds(z, lo, width):
+    d = IntDim("a", lo, lo + width)
+    v = d.decode(z)
+    assert lo <= v <= lo + width
+    assert isinstance(v, int)
+
+
+@settings(max_examples=50, deadline=None)
+@given(z=st.floats(-1.0, 1.0), k=st.integers(0, 6))
+def test_property_logint_power_of_two(z, k):
+    d = LogIntDim("a", 8, 8 * 2**k)
+    v = d.decode(z)
+    assert v % 8 == 0 and (v // 8) & (v // 8 - 1) == 0  # 8 * power of two
+    assert 8 <= v <= 8 * 2**k
+
+
+def test_key_hashable_and_stable():
+    sp = SearchSpace([IntDim("a", 0, 9), ChoiceDim("b", ("u", "v"))])
+    p = sp.decode(np.array([0.3, -1.0]))
+    assert sp.key(p) == sp.key(dict(reversed(list(p.items()))))
+    assert hash(sp.key(p)) is not None
