@@ -76,6 +76,14 @@ def run(seeds=range(8), budget: int = 320, verbose: bool = True) -> dict:
     return {"table": table, "eq_counts": eq}
 
 
+def smoke():
+    """CI lane: reduced seed count / budget, same structure."""
+    out = run(seeds=range(3), budget=120, verbose=False)
+    ok = all(a == b for a, b in out["eq_counts"].values())
+    print(f"csa_vs_nm_eq1_eq2,0.0,exact={ok}")
+    return {"eq_exact": ok}
+
+
 def main(argv=None):
     out = run()
     for case, rows in out["table"].items():

@@ -2,42 +2,99 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run csa_vs_nm  # one
+    PYTHONPATH=src python benchmarks/run.py --smoke --out BENCH_ci.json
 
-Each benchmark prints ``name,us_per_call,derived`` CSV lines.
+Each benchmark prints ``name,us_per_call,derived`` CSV lines.  ``--smoke``
+runs the reduced CI lane (each module's ``smoke()``) and ``--out`` writes a
+machine-readable JSON result so CI accumulates per-PR perf data points.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
 import sys
 import time
 import traceback
+
+# support `python benchmarks/run.py` (script mode puts benchmarks/ on the
+# path, not the repo root the package imports need)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 BENCHES = [
     "csa_vs_nm",  # §2.1: CSA vs NM vs random; Eq.1/Eq.2
     "rb_gauss_seidel",  # §3: the paper's illustrative example (Fig. 1a/1b)
     "kernel_autotune",  # §2.3: block-size tuning on Pallas kernels
+    "tuning_warmstart",  # tuning DB: cold vs near-miss vs exact-replay cost
     "step_autotune",  # §2.4: exec modes on a real train step
     "grad_compression",  # DESIGN §7: compressed DP reduction
     "roofline",  # §Roofline report from the dry-run JSONL
 ]
 
 
-def main() -> None:
-    which = sys.argv[1:] or BENCHES
-    failures = []
-    for name in which:
-        print(f"\n=== benchmarks.{name} ===")
-        t0 = time.time()
+def _run_one(name: str, smoke: bool) -> dict:
+    print(f"\n=== benchmarks.{name} ===")
+    t0 = time.time()
+    entry: dict = {"bench": name, "mode": "smoke" if smoke else "full"}
+    try:
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        if smoke:
+            fn = getattr(mod, "smoke", None)
+            if fn is None:
+                entry.update(status="skipped", reason="no smoke() entry")
+                print(f"bench_{name},0,SKIPPED:no-smoke-entry")
+                return entry
+            out = fn()
+        else:
+            out = mod.main([])
+        entry.update(status="ok", wall_s=time.time() - t0)
+        if isinstance(out, dict):
+            entry["result"] = {
+                k: v for k, v in out.items() if isinstance(v, (int, float, str, bool))
+            }
+        print(f"bench_{name}_wall,{entry['wall_s'] * 1e6:.0f},ok")
+    except Exception as e:
+        traceback.print_exc()
+        entry.update(status="failed", wall_s=time.time() - t0, error=repr(e))
+        print(f"bench_{name}_wall,{entry['wall_s'] * 1e6:.0f},FAILED:{e!r}")
+    return entry
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("benches", nargs="*", default=None, help="subset to run")
+    ap.add_argument("--smoke", action="store_true", help="reduced CI lane")
+    ap.add_argument("--out", type=str, default=None, help="write JSON results here")
+    args = ap.parse_args(argv)
+
+    which = args.benches or BENCHES
+    results = [_run_one(name, args.smoke) for name in which]
+
+    if args.out:
+        blob = {
+            "created": time.time(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "results": results,
+        }
         try:
-            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main([])
-            print(f"bench_{name}_wall,{(time.time()-t0)*1e6:.0f},ok")
-        except Exception as e:
-            traceback.print_exc()
-            failures.append(name)
-            print(f"bench_{name}_wall,{(time.time()-t0)*1e6:.0f},FAILED:{e!r}")
+            import jax
+
+            blob["jax"] = jax.__version__
+            blob["backend"] = jax.default_backend()
+        except Exception:
+            pass
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"\nwrote {args.out}")
+
+    failures = [r["bench"] for r in results if r["status"] == "failed"]
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

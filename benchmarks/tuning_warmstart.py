@@ -1,0 +1,84 @@
+"""Tuning-DB benchmark: what persisting tuning results actually buys.
+
+Measures, for the same kernel context:
+
+  * cold      — full PATSMA search (the paper's Entire Execution cost)
+  * near-miss — search seeded from a stored neighbor (half budget)
+  * exact     — DB replay (the steady-state of a production process)
+
+Prints ``tuning_warmstart_{mode},us,evals=N`` lines; the CI smoke artifact
+tracks the ratios over time.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.kernels.autotuned import autotuned, tune_call
+from repro.tuning import TuningDB
+
+
+def run(n_small=64, n_big=128, max_iter=3, verbose=True) -> dict:
+    tmp = tempfile.mkdtemp(prefix="tuning-bench-")
+    db = TuningDB(os.path.join(tmp, "db.json"))
+
+    def mk(n, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        return (
+            jax.random.normal(ks[0], (n, n)),
+            jax.random.normal(ks[1], (n, n)),
+        )
+
+    a, b = mk(n_small, 0)
+
+    t0 = time.perf_counter()
+    rec_cold = tune_call("matmul", a, b, db=db, interpret=True, max_iter=max_iter)
+    cold_s = time.perf_counter() - t0
+
+    a2, b2 = mk(n_big, 1)  # same computation, new shape -> neighbor seed
+    t0 = time.perf_counter()
+    rec_near = tune_call("matmul", a2, b2, db=db, interpret=True, max_iter=max_iter)
+    near_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = autotuned("matmul", a, b, db=db, interpret=True)  # exact replay
+    jax.block_until_ready(out)
+    exact_s = time.perf_counter() - t0
+
+    res = {
+        "cold_s": cold_s,
+        "cold_evals": rec_cold.evals,
+        "near_s": near_s,
+        "near_evals": rec_near.evals,
+        "exact_s": exact_s,
+        "near_eval_frac": rec_near.evals / max(rec_cold.evals, 1),
+    }
+    if verbose:
+        print(
+            f"tuning_warmstart: cold {cold_s:.2f}s/{rec_cold.evals} evals | "
+            f"near-miss {near_s:.2f}s/{rec_near.evals} evals | exact replay {exact_s * 1e3:.1f}ms"
+        )
+    return res
+
+
+def smoke():
+    out = run(n_small=64, n_big=128, max_iter=2, verbose=True)
+    print(f"tuning_warmstart_cold,{out['cold_s'] * 1e6:.0f},evals={out['cold_evals']}")
+    print(f"tuning_warmstart_near,{out['near_s'] * 1e6:.0f},evals={out['near_evals']}")
+    print(f"tuning_warmstart_exact,{out['exact_s'] * 1e6:.0f},evals=0")
+    return out
+
+
+def main(argv=None):
+    out = run()
+    print(f"tuning_warmstart_cold,{out['cold_s'] * 1e6:.0f},evals={out['cold_evals']}")
+    print(f"tuning_warmstart_near,{out['near_s'] * 1e6:.0f},evals={out['near_evals']}")
+    print(f"tuning_warmstart_exact,{out['exact_s'] * 1e6:.0f},evals=0")
+    return out
+
+
+if __name__ == "__main__":
+    main()

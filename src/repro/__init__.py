@@ -1,0 +1,9 @@
+"""PATSMA (Parameter Auto-tuning for Shared Memory Algorithms) on JAX/Pallas.
+
+Subpackages: ``core`` (optimizers + Autotuning), ``tuning`` (persistent
+tuning DB), ``kernels`` (Pallas kernels + DB-backed dispatch), ``models``,
+``parallel``, ``train``, ``runtime``, ``launch``, ``checkpoint``, ``data``,
+``configs``, ``optim``.
+"""
+
+__version__ = "0.1.0"

@@ -21,6 +21,13 @@ state.  Evaluation counts follow paper Eq. (1)/(2).
 
 Beyond-paper (flagged, default off → faithful): ``cache=True`` memoizes cost
 by decoded point so the optimizer never re-measures a revisited candidate.
+
+Persistent warm-start (beyond-paper, default off → faithful): pass ``db=``
+(a :class:`repro.tuning.TuningDB`) and ``key=`` (a context fingerprint from
+``repro.tuning.make_key``).  An exact key hit adopts the stored best with
+**zero** measurements; a near-miss (same computation/hardware, different
+shapes) seeds the optimizer around the stored point and halves the budget.
+When tuning finishes the result is committed back to the DB automatically.
 """
 from __future__ import annotations
 
@@ -73,6 +80,10 @@ class Autotuning:
         seed: int = 0,
         cache: bool = False,
         verbose: bool = False,
+        db=None,
+        key=None,
+        warm_start: bool = True,
+        db_source: str = "online",
     ) -> None:
         if ignore < 0:
             raise ValueError("ignore must be >= 0")
@@ -96,6 +107,27 @@ class Autotuning:
         self._evals = 0  # completed cost evaluations fed to the optimizer
         self._measurements = 0  # target iterations spent on tuning (incl. ignored)
         self._history: list = []  # (point_dict, cost)
+        # persistent tuning store (repro.tuning): exact hit / warm seed
+        self.db = db
+        self.key = key
+        self._db_source = str(db_source)  # provenance stamped on auto-commit
+        self._db_hit = None  # record adopted wholesale (exact fingerprint hit)
+        self._db_seeded = False  # near-miss: optimizer seeded + budget shrunk
+        self._committed = False
+        if db is not None and key is not None and warm_start:
+            rec, exact = db.lookup(key)
+            if exact and rec is not None:
+                self._db_hit = rec
+                self._point = dict(rec.point)
+                if self.verbose:
+                    print(f"[patsma] db hit {rec.point} (cost {rec.cost:.6g}); skipping tuning")
+                return  # finished before the first measurement
+            if rec is not None:
+                from repro.tuning.warm_start import apply_warm_start
+
+                self._db_seeded = apply_warm_start(self.space, self.optimizer, rec)
+                if self.verbose and self._db_seeded:
+                    print(f"[patsma] warm start from neighbor {rec.point}")
         # prime: first run() call's cost is ignored by contract
         self._z = self.optimizer.run(np.nan)
         self._point = self.space.decode(self._z)
@@ -104,7 +136,12 @@ class Autotuning:
     # ----------------------------------------------------------- properties
     @property
     def finished(self) -> bool:
-        return self.optimizer.is_end()
+        return self._db_hit is not None or self.optimizer.is_end()
+
+    @property
+    def warm_started(self) -> bool:
+        """True if a stored record shaped this run (exact hit or neighbor seed)."""
+        return self._db_hit is not None or self._db_seeded
 
     @property
     def point(self) -> dict:
@@ -117,12 +154,16 @@ class Autotuning:
 
     @property
     def best_point(self) -> dict:
+        if self._db_hit is not None:
+            return dict(self._db_hit.point)
         if np.isfinite(self.optimizer.best_cost):
             return self.space.decode(self.optimizer.best_solution)
         return dict(self._point)
 
     @property
     def best_cost(self) -> float:
+        if self._db_hit is not None:
+            return float(self._db_hit.cost)
         return self.optimizer.best_cost
 
     @property
@@ -140,12 +181,17 @@ class Autotuning:
     def reset(self, level: int = 0) -> None:
         """Re-enter tuning (e.g. when the watchdog detects environment drift).
 
-        Forwards to the optimizer's reset (paper §2.2).  Level >= 2 also
-        clears the cost cache — the old measurements no longer describe the
-        environment."""
+        Forwards to the optimizer's reset (paper §2.2) and clears the cost
+        cache: a drift reset means the old measurements no longer describe
+        the environment, and a kept cache would answer every revisited
+        candidate instantly — finishing the "re-tune" with zero fresh
+        measurements and committing pre-drift data to the DB."""
         self.optimizer.reset(level)
-        if level >= 2:
-            self._cost_cache.clear()
+        self._cost_cache.clear()
+        # a reset means the environment drifted: re-enter real tuning even if
+        # this run was answered from the DB, and allow a fresh commit
+        self._db_hit = None
+        self._committed = False
         self._t0 = None
         self._ignore_left = self.ignore
         self._z = self.optimizer.run(np.nan)
@@ -199,7 +245,24 @@ class Autotuning:
         self._z = self.optimizer.run(cost)
         self._point = self.space.decode(self._z)
         self._ignore_left = self.ignore
+        if self.optimizer.is_end():
+            self.commit()
         self._advance_through_cache()
+
+    def commit(self, *, source: Optional[str] = None) -> None:
+        """Persist the current best into the attached tuning DB (idempotent;
+        called automatically when the optimizer finishes).  ``source``
+        defaults to the constructor's ``db_source`` provenance label."""
+        if self.db is None or self.key is None or self._committed:
+            return
+        if self._db_hit is not None:
+            return  # answered from the DB; nothing new to write back
+        from repro.tuning.warm_start import record_from
+
+        rec = record_from(self, self.key, source=source or self._db_source)
+        if rec is not None:
+            self.db.put(rec)
+            self._committed = True
 
     def _advance_through_cache(self) -> None:
         """If caching is on, answer revisited candidates from the cache."""

@@ -65,6 +65,10 @@ class CSA(NumericalOptimizer):
         self._m = num_opt
         self._max_iter = max_iter
         self._tgen0 = float(tgen0)
+        # cold-start configuration; seed()/shrink_budget() narrow the live
+        # values, a complete reset must restore these
+        self._cold_max_iter = max_iter
+        self._cold_tgen0 = float(tgen0)
         self._tac0 = float(tac0)
         self._alpha = float(alpha)
         self._seed = seed
@@ -120,12 +124,36 @@ class CSA(NumericalOptimizer):
             f"best={self._best_e:.6g} @ {np.array2string(self._best_x, precision=3)}"
         )
 
+    def seed(self, z0, spread: float = 0.2) -> bool:
+        """Warm start: place solver 0 exactly at ``z0`` and scatter the other
+        coupled solvers around it (Cauchy-free gaussian cloud, wrapped into the
+        toroidal domain).  Only valid before the first cost is delivered."""
+        if self._phase != _INIT or self._idx != 0:
+            return False
+        z0 = np.asarray(z0, dtype=float).reshape(-1)
+        if z0.shape[0] != self._dim:
+            raise ValueError(f"seed dim {z0.shape[0]} != {self._dim}")
+        self._x[0] = self._clip(z0)
+        for i in range(1, self._m):
+            self._x[i] = self._wrap(z0 + self._rng.normal(0.0, spread, size=self._dim))
+        # a tight start wants a cooler generation schedule than a blind one
+        self._tgen = self._tgen0 = min(self._tgen0, max(spread, 1e-3))
+        return True
+
+    def shrink_budget(self, frac: float) -> bool:
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"frac must be in (0, 1], got {frac}")
+        self._max_iter = max(1, int(np.ceil(self._max_iter * frac)))
+        return True
+
     def reset(self, level: int = 0) -> None:
         """level 0: re-anneal keeping all current solutions;
         level 1: keep only the best solution, randomize the rest;
         level >= 2: complete reset (paper §2.2: 'a complete reset')."""
         if level >= 2:
             self._rng = np.random.default_rng(self._seed)
+            self._tgen0 = self._cold_tgen0
+            self._max_iter = self._cold_max_iter
             self._full_init()
             return
         if level == 1:

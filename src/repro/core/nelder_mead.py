@@ -45,6 +45,7 @@ class NelderMead(NumericalOptimizer):
         self._dim = dim
         self._error = float(error)
         self._max_evals = int(max_iter)  # paper calls it max_iter; it counts evals
+        self._cold_max_evals = int(max_iter)  # shrink_budget narrows the live value
         self._alpha, self._gamma, self._beta, self._sigma = alpha, gamma, beta, sigma
         self._init_scale = init_scale
         self._seed = seed
@@ -99,11 +100,39 @@ class NelderMead(NumericalOptimizer):
             f"spread={self._spread():.3g} best={self._best_e:.6g}"
         )
 
+    def seed(self, z0, spread: float = 0.2) -> bool:
+        """Warm start: build the initial simplex around ``z0`` instead of a
+        random point.  Only valid before the first cost is delivered."""
+        if self._stage != _INIT or self._idx != 0 or self._pending is not None:
+            return False
+        z0 = np.asarray(z0, dtype=float).reshape(-1)
+        if z0.shape[0] != self._dim:
+            raise ValueError(f"seed dim {z0.shape[0]} != {self._dim}")
+        self._simplex = np.tile(self._clip(z0), (self._dim + 1, 1))
+        for i in range(self._dim):
+            base = self._simplex[i + 1, i]
+            # perturb toward the interior when the seed sits at the upper
+            # bound, else the vertex collapses onto the base point and the
+            # simplex has zero extent in that dimension
+            step = spread if self._clip(base + spread)[()] != base else -spread
+            self._simplex[i + 1, i] = self._clip(base + step)[()]
+        self._best_x = self._simplex[0].copy()
+        return True
+
+    def shrink_budget(self, frac: float) -> bool:
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"frac must be in (0, 1], got {frac}")
+        if self._max_evals > 0:
+            # keep at least one full simplex evaluation worth of budget
+            self._max_evals = max(self._dim + 2, int(np.ceil(self._max_evals * frac)))
+        return True
+
     def reset(self, level: int = 0) -> None:
         """level 0: rebuild the simplex around the best-known solution;
         level >= 1: complete reset from a fresh random simplex."""
         if level >= 1:
             self._rng = np.random.default_rng(self._seed)
+            self._max_evals = self._cold_max_evals
             self._full_init()
             return
         best_x, best_e = self._best_x.copy(), self._best_e

@@ -62,6 +62,25 @@ class NumericalOptimizer(abc.ABC):
         0 → light reset retaining found solutions; higher levels discard
         progressively more, up to a complete reset."""
 
+    # --- warm-start hooks (beyond-paper; used by repro.tuning) --------------
+    def seed(self, z0: np.ndarray, spread: float = 0.2) -> bool:
+        """Bias the initial state toward ``z0`` (normalized coords).
+
+        Called before the first :meth:`run` by the warm-start machinery when a
+        persisted tuning record for a *nearby* context exists.  Implementations
+        should concentrate their initial population / simplex around ``z0``
+        with the given ``spread``.  Returns True if applied; the default is a
+        no-op (optimizers without a useful notion of seeding stay faithful)."""
+        return False
+
+    def shrink_budget(self, frac: float) -> bool:
+        """Scale the remaining evaluation budget by ``frac`` (0 < frac <= 1).
+
+        Warm-started searches begin near a known-good solution, so they are
+        granted a reduced budget (the point of persisting tuning results).
+        Returns True if applied; default no-op."""
+        return False
+
     def print(self) -> None:  # optional (paper line 11); keep the paper's name
         """Print debug/verbose optimizer state."""
 

@@ -1,8 +1,10 @@
 """Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles in ref.py.
 
 Tunable block shapes are first-class PATSMA targets; validated on CPU with
-interpret=True against ref.py in tests/test_kernels.py.
+interpret=True against ref.py in tests/test_kernels.py.  ``autotuned`` is the
+tuning-DB-backed dispatch layer (stored best block shapes per call context).
 """
 from . import ops, ref
+from .autotuned import autotuned, tune_call
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "autotuned", "tune_call"]

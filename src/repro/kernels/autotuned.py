@@ -1,0 +1,225 @@
+"""DB-backed entry point for the Pallas kernels.
+
+``autotuned(name, *args)`` is the one call sites use when they want tuned
+block shapes without owning a tuning loop: it fingerprints the call context
+(kernel name, input shapes/dtypes, search space, backend/device), consults the
+:class:`repro.tuning.TuningDB`, and dispatches the kernel with
+
+* the stored best on an **exact** fingerprint hit (zero overhead),
+* a stored **neighbor**'s point clamped into this shape's space (near miss),
+* the kernel's registered defaults on a cold miss — or, with ``tune=True``,
+  a measured PATSMA search (warm-seeded from the neighbor when one exists)
+  whose result is committed back to the DB.
+
+The ``pretune`` CLI sweeps the registered grid below offline so production
+processes and CI land on the first branch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import CSA, Autotuning, LogIntDim, RuntimeCost, SearchSpace
+from repro.tuning import TuningDB, default_db, make_key
+
+from . import ops
+
+__all__ = ["autotuned", "tune_call", "register", "get_spec", "registered", "KernelSpec"]
+
+
+# ------------------------------------------------------------------ registry
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str
+    fn: Callable  # fn(*args, **kwargs, **knobs, interpret=...)
+    space: Callable  # space(*args, **kwargs) -> SearchSpace over the knobs
+    defaults: Callable  # defaults(*args, **kwargs) -> dict of knob values
+
+
+_REGISTRY: dict = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_spec(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; registered: {sorted(_REGISTRY)}") from None
+
+
+def registered() -> list:
+    return sorted(_REGISTRY)
+
+
+def _pow2_floor(n: int) -> int:
+    """Largest power of two that divides n (n>0)."""
+    return n & (-n)
+
+
+def _log_dim(name: str, n: int, lo: int, cap: int) -> LogIntDim:
+    """Power-of-two tile dim that always divides ``n``: bounds clamp to the
+    largest power-of-two divisor of n, so every decodable value is legal."""
+    g = _pow2_floor(int(n))
+    lo = max(1, min(lo, g))
+    hi = max(lo, min(cap, g, int(n)))
+    return LogIntDim(name, lo, hi)
+
+
+# --------------------------------------------------------- registered kernels
+register(
+    KernelSpec(
+        name="matmul",
+        fn=ops.matmul,
+        space=lambda a, b: SearchSpace(
+            [
+                _log_dim("bm", a.shape[0], 32, 256),
+                _log_dim("bn", b.shape[1], 32, 256),
+                _log_dim("bk", a.shape[1], 32, 256),
+            ]
+        ),
+        defaults=lambda a, b: {
+            "bm": min(256, _pow2_floor(a.shape[0])),
+            "bn": min(256, _pow2_floor(b.shape[1])),
+            "bk": min(256, _pow2_floor(a.shape[1])),
+        },
+    )
+)
+
+register(
+    KernelSpec(
+        name="flash_attention",
+        fn=ops.flash_attention,
+        # q: (B,Sq,H,hd); k/v: (B,Kh,Skv,hd)
+        space=lambda q, k, v, **kw: SearchSpace(
+            [
+                _log_dim("block_q", q.shape[1], 16, 512),
+                _log_dim("block_kv", k.shape[2], 16, 512),
+            ]
+        ),
+        defaults=lambda q, k, v, **kw: {
+            "block_q": min(128, _pow2_floor(q.shape[1])),
+            "block_kv": min(128, _pow2_floor(k.shape[2])),
+        },
+    )
+)
+
+register(
+    KernelSpec(
+        name="decode_attention",
+        fn=ops.decode_attention,
+        # q: (B,H,hd); k/v: (B,Kh,S,hd); valid: (B,S)
+        space=lambda q, k, v, valid: SearchSpace(
+            [_log_dim("block_kv", k.shape[2], 64, 1024)]
+        ),
+        defaults=lambda q, k, v, valid: {"block_kv": min(512, _pow2_floor(k.shape[2]))},
+    )
+)
+
+register(
+    KernelSpec(
+        name="lru_scan",
+        fn=ops.lru_scan,
+        # a,b: (B,T,D); h0: (B,D)
+        space=lambda a, b, h0: SearchSpace([_log_dim("chunk", a.shape[1], 16, 256)]),
+        defaults=lambda a, b, h0: {"chunk": min(128, _pow2_floor(a.shape[1]))},
+    )
+)
+
+register(
+    KernelSpec(
+        name="rwkv_scan",
+        fn=ops.rwkv_scan,
+        # r,k,v,lw: (B,T,H,hd); u: (H,hd); s0: (B,H,hd,hd)
+        space=lambda r, k, v, lw, u, s0: SearchSpace(
+            [_log_dim("chunk", r.shape[1], 16, 128)]
+        ),
+        defaults=lambda r, k, v, lw, u, s0: {"chunk": min(64, _pow2_floor(r.shape[1]))},
+    )
+)
+
+
+# ------------------------------------------------------------------- tuning
+def tune_call(
+    name: str,
+    *args,
+    db: Optional[TuningDB] = None,
+    interpret: bool = False,
+    num_opt: int = 3,
+    max_iter: int = 4,
+    seed: int = 0,
+    warmup: int = 1,
+    repeats: int = 2,
+    verbose: bool = False,
+    source: str = "online",
+    **kwargs,
+):
+    """Run a measured PATSMA search for this call context and commit the
+    result to ``db``.  Warm-seeds from the nearest stored neighbor when one
+    exists (half budget).  Returns the TuningRecord for the context."""
+    import jax
+
+    spec = get_spec(name)
+    space = spec.space(*args, **kwargs)
+    key = make_key(name, args=args, kwargs=kwargs, space=space,
+                   extra={"interpret": bool(interpret)})
+    db = db if db is not None else default_db()
+    cost = RuntimeCost(warmup=warmup, repeats=repeats)
+
+    def measure(*knob_values):
+        knobs = dict(zip(space.names, knob_values))
+        try:
+            fn = jax.jit(
+                lambda *xs: spec.fn(*xs, **kwargs, **knobs, interpret=interpret)
+            )
+            return cost(fn, *args)
+        except Exception:
+            return np.inf  # illegal tile for this shape → crashed candidate
+
+    at = Autotuning(
+        space=space,
+        ignore=0,  # RuntimeCost already discards warmup runs
+        optimizer=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
+        cache=True,
+        verbose=verbose,
+        db=db,
+        key=key,
+        db_source=source,
+    )
+    at.entire_exec(measure)
+    at.commit()  # no-op if auto-committed / exact hit
+    return db.get(key)
+
+
+def autotuned(
+    name: str,
+    *args,
+    db: Optional[TuningDB] = None,
+    tune: bool = False,
+    interpret: bool = False,
+    **kwargs,
+):
+    """Dispatch kernel ``name`` with the best knobs known for this context."""
+    spec = get_spec(name)
+    space = spec.space(*args, **kwargs)
+    key = make_key(name, args=args, kwargs=kwargs, space=space,
+                   extra={"interpret": bool(interpret)})
+    db = db if db is not None else default_db()
+    rec, exact = db.lookup(key)
+    if not exact and tune:
+        tuned_rec = tune_call(name, *args, db=db, interpret=interpret, **kwargs)
+        if tuned_rec is not None:  # all-crashed run: keep the neighbor fallback
+            rec, exact = tuned_rec, True
+    if exact:
+        knobs = {n: rec.point[n] for n in space.names}
+    elif rec is not None and all(n in rec.point for n in space.names):
+        # neighbor: reuse its point, clamped into this shape's (smaller) space
+        knobs = space.decode(space.encode(rec.point))
+    else:
+        knobs = spec.defaults(*args, **kwargs)
+    return spec.fn(*args, **kwargs, **knobs, interpret=interpret)

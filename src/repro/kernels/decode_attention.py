@@ -17,6 +17,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["decode_attention_fwd"]
 
 NEG_INF = -1e30
@@ -83,7 +85,7 @@ def decode_attention_fwd(q, k, v, valid, *, block_kv: int = 512, interpret: bool
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

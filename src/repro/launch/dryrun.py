@@ -288,7 +288,13 @@ def run_cell(
             "argument_bytes": mem.argument_size_in_bytes,
             "output_bytes": mem.output_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
-            "peak_bytes": mem.peak_memory_in_bytes,
+            # older jaxlib has no peak stat; args+outputs+temps is the upper
+            # bound XLA itself reports for those versions
+            "peak_bytes": getattr(
+                mem,
+                "peak_memory_in_bytes",
+                mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes,
+            ),
             "alias_bytes": mem.alias_size_in_bytes,
         },
         "cost_reported": step_cost.as_dict(),
@@ -306,7 +312,8 @@ def run_cell(
             f"[dryrun] {arch} × {shape_name} ({'multi' if multi_pod else 'single'}-pod, "
             f"{chips} chips): compile OK in {result['elapsed_s']}s\n"
             f"  mem/chip: args {mem.argument_size_in_bytes/1e9:.2f} GB, "
-            f"temp {mem.temp_size_in_bytes/1e9:.2f} GB, peak {mem.peak_memory_in_bytes/1e9:.2f} GB\n"
+            f"temp {mem.temp_size_in_bytes/1e9:.2f} GB, "
+            f"peak {result['memory']['peak_bytes']/1e9:.2f} GB\n"
             f"  roofline/chip: compute {terms.compute_s*1e3:.2f} ms | memory "
             f"{terms.memory_s*1e3:.2f} ms | collective {terms.collective_s*1e3:.2f} ms "
             f"-> {dom}-bound\n"

@@ -3,11 +3,21 @@ module never touches jax device state)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes have no axis types yet
+    AxisType = None
 
 from repro.parallel.api import ShardingRules
 
 __all__ = ["make_production_mesh", "make_mesh", "default_rules"]
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,11 +26,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     hierarchical DP/FSDP (or acts as the pipeline axis, see parallel.pipeline)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(tuple(shape), tuple(axes))
 
 
 def default_rules(mesh, *, fsdp: bool = True, sp: bool = False) -> ShardingRules:

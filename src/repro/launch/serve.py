@@ -2,7 +2,11 @@
 PATSMA-tuned decode fusion depth.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --tiny \
-        --batch 8 --prompt-len 32 --gen 64
+        --batch 8 --prompt-len 32 --gen 64 --db tuned/serve.json
+
+With ``--db`` the tuned fusion depth persists across launches: the second
+process with the same (arch, batch) context skips tuning entirely and decodes
+at the stored-best ``k`` from the first token.
 """
 import argparse
 import time
@@ -13,6 +17,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.core import Autotuning, CSA, ChoiceDim, SearchSpace
 from repro.models import ExecConfig, Model
+from repro.tuning import TuningDB, make_key
 
 
 def main():
@@ -23,6 +28,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--no-tune", action="store_true")
+    ap.add_argument("--db", type=str, default=None,
+                    help="tuning DB path; persists the tuned decode k across runs")
     args = ap.parse_args()
 
     cfg = configs.get_tiny(args.arch) if args.tiny else configs.get(args.arch)
@@ -60,8 +67,18 @@ def main():
         return run
 
     space = SearchSpace([ChoiceDim("k", (1, 2, 4, 8))])
+    db = TuningDB(args.db) if args.db else None
+    key = None
+    if db is not None:
+        key = make_key(
+            "serve/decode_k", space=space,
+            extra={"arch": args.arch, "tiny": args.tiny, "batch": args.batch},
+        )
     at = Autotuning(space=space, ignore=1,
-                    optimizer=CSA(1, num_opt=3, max_iter=4, seed=0), cache=True)
+                    optimizer=CSA(1, num_opt=3, max_iter=4, seed=0), cache=True,
+                    db=db, key=key)
+    if at.finished and at.warm_started:
+        print(f"tuning db hit: decode k={at.point['k']} (no online tuning)")
     fns = {}
     pos = jnp.int32(P)
     emitted = 0

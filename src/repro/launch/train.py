@@ -26,6 +26,8 @@ def main():
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--tune", action="store_true", help="PATSMA single-iteration mode")
+    ap.add_argument("--db", type=str, default=None,
+                    help="tuning DB path; warm-starts step knobs across runs")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", action="store_true",
                     help="initialize jax.distributed from env (multi-host)")
@@ -47,6 +49,7 @@ def main():
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
         tune=args.tune,
+        tune_db=args.db,
     )
     hist = job.run()
     print(json.dumps({

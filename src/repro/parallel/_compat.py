@@ -1,0 +1,27 @@
+"""Version compatibility for parallelism symbols.
+
+``shard_map`` was promoted out of ``jax.experimental`` and its
+``check_rep`` kwarg renamed to ``check_vma`` in newer jax releases;
+resolve whichever this interpreter provides and accept the modern
+kwarg name at every call site.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: pre-promotion name
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+
+    def shard_map(*args, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        return _shard_map(*args, **kwargs)
+
+
+__all__ = ["shard_map"]

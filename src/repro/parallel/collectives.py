@@ -26,8 +26,9 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from ._compat import shard_map
 
 __all__ = ["int8_psum", "topk_psum", "make_compressed_dp_step", "wire_bytes"]
 

@@ -65,7 +65,7 @@ def gpipe_apply(
         ys = jnp.where(sid == S - 1, ys, jnp.zeros_like(ys))
         return jax.lax.psum(ys, axis)
 
-    from jax import shard_map
+    from ._compat import shard_map
 
     specs_params = jax.tree.map(lambda _: P(axis), stage_params)
     fn = shard_map(

@@ -77,6 +77,7 @@ class TrainJob:
     tune_microbatches: tuple = (1, 2, 4)
     tune_max_iter: int = 4
     tune_num_opt: int = 3
+    tune_db: Optional[str] = None  # tuning DB path: warm-start knobs across runs
     ignore: int = 1
     watchdog_factor: float = 1.8
     exec_cfg: ExecConfig = dataclasses.field(default_factory=lambda: ExecConfig(rec_chunk=8))
@@ -111,6 +112,11 @@ class TrainJob:
                 m for m in self.tune_microbatches if self.global_batch % m == 0
             ) or (1,)
             space = SearchSpace([ChoiceDim("microbatches", valid_mbs)])
+            db = None
+            if self.tune_db is not None:
+                from repro.tuning import TuningDB
+
+                db = TuningDB(self.tune_db)
             tuned = TunedStep(
                 factory,
                 space,
@@ -119,6 +125,13 @@ class TrainJob:
                 max_iter=self.tune_max_iter,
                 cache=True,
                 seed=self.seed,
+                db=db,
+                name=f"train_step/{self.arch}",
+                key_extra={
+                    "tiny": self.tiny,
+                    "global_batch": self.global_batch,
+                    "seq_len": self.seq_len,
+                },
             )
         else:
             step_fn = factory()

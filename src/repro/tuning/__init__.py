@@ -1,0 +1,38 @@
+"""Persistent tuning store: context-keyed records of PATSMA search results.
+
+The paper's "Entire Execution" mode re-pays the full evaluation budget every
+launch; this package amortizes it across processes.  Results are keyed by a
+context fingerprint — (name, input shapes+dtypes, search-space hash, jax
+backend, device kind) — and stored in a versioned JSON DB with atomic writes.
+
+* :mod:`repro.tuning.records`    — fingerprints + record schema
+* :mod:`repro.tuning.db`         — the on-disk database
+* :mod:`repro.tuning.warm_start` — exact-hit replay / neighbor seeding policy
+* :mod:`repro.tuning.pretune`    — offline sweep CLI (``python -m repro.tuning.pretune``)
+"""
+from .db import ENV_DB_PATH, TuningDB, default_db
+from .records import (
+    SCHEMA_VERSION,
+    TuningKey,
+    TuningRecord,
+    default_device,
+    make_key,
+    signature_of,
+    space_fingerprint,
+)
+from .warm_start import apply_warm_start, record_from
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ENV_DB_PATH",
+    "TuningDB",
+    "TuningKey",
+    "TuningRecord",
+    "default_db",
+    "default_device",
+    "make_key",
+    "signature_of",
+    "space_fingerprint",
+    "apply_warm_start",
+    "record_from",
+]

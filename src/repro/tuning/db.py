@@ -1,0 +1,180 @@
+"""JSON-on-disk tuning database with atomic writes and corrupt-file recovery.
+
+Layout (versioned)::
+
+    {
+      "schema": 1,
+      "records": { "<key.encode()>": {record json}, ... }
+    }
+
+* **Atomic writes** — saves go through a same-directory temp file + fsync +
+  ``os.replace`` so a crash mid-save never corrupts an existing DB, and
+  concurrent writers leave one winner, not a splice.
+* **Corrupt recovery** — an unreadable/garbage file is moved aside to
+  ``<path>.corrupt`` and the DB starts empty instead of crashing the host
+  program (tuning is an accelerant, never a point of failure).
+* **Schema gating** — a future-schema file is left untouched on disk and
+  ignored in memory.
+
+``default_db()`` gives library call sites (the kernels' ``autotuned`` entry
+point) a process-wide DB without plumbing: file-backed when the
+``REPRO_TUNING_DB`` env var names a path, otherwise in-memory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import threading
+from typing import Optional, Tuple
+
+from .records import SCHEMA_VERSION, TuningKey, TuningRecord
+
+__all__ = ["TuningDB", "default_db"]
+
+#: env var naming the process-default DB file
+ENV_DB_PATH = "REPRO_TUNING_DB"
+
+
+class TuningDB:
+    """Context-keyed store of :class:`TuningRecord`.  ``path=None`` → in-memory."""
+
+    def __init__(self, path: Optional[str] = None, *, autosave: bool = True) -> None:
+        self.path = os.fspath(path) if path is not None else None
+        self.autosave = autosave
+        self._lock = threading.Lock()
+        self._records: dict = {}  # encoded key -> TuningRecord
+        if self.path is not None:
+            self.load()
+
+    # ----------------------------------------------------------------- io
+    def load(self) -> int:
+        """(Re)load from disk; returns the number of records loaded."""
+        if self.path is None or not os.path.exists(self.path):
+            return 0
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                blob = json.load(f)
+            if not isinstance(blob, dict) or "records" not in blob:
+                raise ValueError("not a tuning DB")
+            if int(blob.get("schema", -1)) > SCHEMA_VERSION:
+                print(
+                    f"[tuning] {self.path}: schema {blob.get('schema')} is newer than "
+                    f"supported ({SCHEMA_VERSION}); ignoring file",
+                    file=sys.stderr,
+                )
+                return 0
+            records = {}
+            for k, rj in blob["records"].items():
+                records[k] = TuningRecord.from_json(rj)
+            with self._lock:
+                self._records = records
+            return len(records)
+        except Exception as e:  # corrupted → quarantine and start fresh
+            backup = self.path + ".corrupt"
+            try:
+                os.replace(self.path, backup)
+                note = f"moved to {backup}"
+            except OSError:
+                note = "could not quarantine"
+            print(
+                f"[tuning] {self.path}: unreadable ({e!r}); {note}; starting empty",
+                file=sys.stderr,
+            )
+            with self._lock:
+                self._records = {}
+            return 0
+
+    def save(self) -> None:
+        """Atomic write (temp file in the same directory + os.replace)."""
+        if self.path is None:
+            return
+        with self._lock:
+            blob = {
+                "schema": SCHEMA_VERSION,
+                "records": {k: r.to_json() for k, r in sorted(self._records.items())},
+            }
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".tuningdb-", dir=d)
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # ------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._records)
+
+    def records(self) -> list:
+        with self._lock:
+            return list(self._records.values())
+
+    def get(self, key: TuningKey) -> Optional[TuningRecord]:
+        with self._lock:
+            return self._records.get(key.encode())
+
+    def nearest(self, key: TuningKey) -> Optional[TuningRecord]:
+        """Closest warm-start neighbor: same computation + hardware, nearest
+        array shapes by log distance (see :meth:`TuningKey.distance`)."""
+        best, best_d = None, float("inf")
+        for rec in self.records():  # snapshot: concurrent put() must not race
+            d = key.distance(rec.key)
+            if d < best_d:
+                best, best_d = rec, d
+        return best
+
+    def lookup(self, key: TuningKey) -> Tuple[Optional[TuningRecord], bool]:
+        """(record, exact).  Exact hit → replay with zero re-measurement;
+        neighbor hit → seed the search around the stored point."""
+        rec = self.get(key)
+        if rec is not None:
+            return rec, True
+        return self.nearest(key), False
+
+    # ------------------------------------------------------------- updates
+    def put(self, record: TuningRecord, *, save: Optional[bool] = None) -> None:
+        """Insert/overwrite; persists immediately when file-backed (autosave)."""
+        with self._lock:
+            self._records[record.key.encode()] = record
+        if save if save is not None else (self.autosave and self.path is not None):
+            self.save()
+
+    def merge(self, other: "TuningDB", *, prefer_lower_cost: bool = True) -> int:
+        """Fold another DB in; returns the number of records adopted."""
+        n = 0
+        for rec in other.records():
+            mine = self.get(rec.key)
+            if mine is None or not prefer_lower_cost or rec.cost < mine.cost:
+                self.put(rec, save=False)
+                n += 1
+        if self.autosave and self.path is not None:
+            self.save()
+        return n
+
+
+_default: Optional[TuningDB] = None
+_default_lock = threading.Lock()
+
+
+def default_db() -> TuningDB:
+    """Process-wide DB: file-backed iff ``REPRO_TUNING_DB`` is set."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = TuningDB(os.environ.get(ENV_DB_PATH) or None)
+        return _default

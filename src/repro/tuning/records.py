@@ -1,0 +1,224 @@
+"""Context fingerprints and tuning records.
+
+A tuning result is only reusable inside the context it was measured in; the
+fingerprint captures that context:
+
+    (name, input signature, search-space hash, jax backend, device kind[, extra])
+
+* ``name``       — the kernel / step being tuned ("matmul", "train_step/qwen2_7b").
+* ``signature``  — canonical shapes+dtypes of the call's array arguments (plus
+  any static scalars); different shapes are different keys.
+* ``space_hash`` — hash of the search-space *structure* (dim kinds, names,
+  bounds).  A changed space invalidates stored points.
+* ``backend`` / ``device_kind`` — a block size tuned on a TPU v5e says nothing
+  about CPU interpret mode.
+* ``extra``      — free-form context a caller wants keyed (global batch, ...).
+
+Keys must be stable **across processes** (they are the on-disk dict keys), so
+everything is canonical JSON + sha256 — never Python ``hash()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Any, Mapping, Optional, Sequence
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "TuningKey",
+    "TuningRecord",
+    "make_key",
+    "signature_of",
+    "space_fingerprint",
+    "default_device",
+]
+
+#: bump when the on-disk layout of records/keys changes incompatibly
+SCHEMA_VERSION = 1
+
+
+# ------------------------------------------------------------- fingerprints
+def space_fingerprint(space) -> str:
+    """Stable hash of a SearchSpace's structure (kind, name, bounds per dim)."""
+    spec = []
+    for d in space.dims:
+        fields = {f.name: getattr(d, f.name) for f in dataclasses.fields(d)}
+        spec.append({"kind": type(d).__name__, **fields})
+    blob = json.dumps(spec, sort_keys=True, default=repr, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _sig_entry(v: Any):
+    if hasattr(v, "shape") and hasattr(v, "dtype"):  # jax / numpy arrays
+        return ["array", str(v.dtype), [int(s) for s in v.shape]]
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return ["py", repr(v)]
+    return ["py", f"<{type(v).__name__}>"]
+
+
+def signature_of(args: Sequence[Any] = (), kwargs: Optional[Mapping[str, Any]] = None):
+    """Canonical, JSON-able signature of a call's inputs."""
+    sig = [_sig_entry(v) for v in args]
+    for k in sorted(kwargs or {}):
+        sig.append([k, _sig_entry(kwargs[k])])
+    return sig
+
+
+def default_device() -> tuple:
+    """(backend, device_kind) of the current process's default jax device."""
+    try:
+        import jax
+
+        return str(jax.default_backend()), str(jax.devices()[0].device_kind)
+    except Exception:
+        return "none", "unknown"
+
+
+def _canon(x: Any) -> str:
+    return json.dumps(x, sort_keys=True, default=repr, separators=(",", ":"))
+
+
+# --------------------------------------------------------------------- keys
+@dataclasses.dataclass(frozen=True)
+class TuningKey:
+    """Context fingerprint.  ``encode()`` is the canonical string form used as
+    the on-disk dict key."""
+
+    name: str
+    signature: str  # canonical JSON (string so the dataclass stays hashable)
+    space_hash: str
+    backend: str
+    device_kind: str
+    extra: str = "{}"  # canonical JSON of caller-supplied context
+
+    def encode(self) -> str:
+        return "|".join(
+            [
+                f"v{SCHEMA_VERSION}",
+                self.name,
+                self.signature,
+                self.space_hash,
+                self.backend,
+                self.device_kind,
+                self.extra,
+            ]
+        )
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "TuningKey":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+    # --------------------------------------------------- neighbor matching
+    def shapes(self) -> Optional[list]:
+        """Array shapes in the signature, or None if it has none.  Memoized:
+        ``nearest()`` calls this once per stored record per lookup."""
+        try:
+            return self._shapes_memo
+        except AttributeError:
+            pass
+        try:
+            sig = json.loads(self.signature)
+            out = [e[2] for e in sig if isinstance(e, list) and e and e[0] == "array"]
+            out = out or None
+        except Exception:
+            out = None
+        # frozen dataclass: bypass the immutability guard for the cache slot
+        object.__setattr__(self, "_shapes_memo", out)
+        return out
+
+    def distance(self, other: "TuningKey") -> float:
+        """Log-scale shape distance to a candidate warm-start neighbor.
+
+        Finite only for keys that describe *the same computation on the same
+        hardware in the same execution context* (name, backend, device kind,
+        extra — so e.g. interpreter-mode timings never warm-start compiled
+        dispatch) with structurally matching signatures; then it is the summed
+        |log2| ratio of array dims — the natural metric for block-size spaces,
+        where good tiles move with the problem size by powers of two.
+        ``space_hash`` may differ: neighbor shapes clamp the space bounds, and
+        the warm-start path re-encodes the point into the current domain."""
+        import math
+
+        if (self.name, self.backend, self.device_kind, self.extra) != (
+            other.name,
+            other.backend,
+            other.device_kind,
+            other.extra,
+        ):
+            return math.inf
+        a, b = self.shapes(), other.shapes()
+        if a is None or b is None or len(a) != len(b):
+            return math.inf
+        d = 0.0
+        for sa, sb in zip(a, b):
+            if len(sa) != len(sb):
+                return math.inf
+            for xa, xb in zip(sa, sb):
+                if xa <= 0 or xb <= 0:
+                    return math.inf
+                d += abs(math.log2(xa / xb))
+        return d
+
+
+def make_key(
+    name: str,
+    *,
+    args: Sequence[Any] = (),
+    kwargs: Optional[Mapping[str, Any]] = None,
+    space=None,
+    extra: Optional[Mapping[str, Any]] = None,
+    backend: Optional[str] = None,
+    device_kind: Optional[str] = None,
+) -> TuningKey:
+    """Build the context fingerprint for one tuning site."""
+    if backend is None or device_kind is None:
+        b, dk = default_device()
+        backend = backend if backend is not None else b
+        device_kind = device_kind if device_kind is not None else dk
+    return TuningKey(
+        name=name,
+        signature=_canon(signature_of(args, kwargs)),
+        space_hash=space_fingerprint(space) if space is not None else "-",
+        backend=backend,
+        device_kind=device_kind,
+        extra=_canon(dict(extra or {})),
+    )
+
+
+# ------------------------------------------------------------------ records
+@dataclasses.dataclass
+class TuningRecord:
+    """One persisted tuning result: the best point found for a context key."""
+
+    key: TuningKey
+    point: dict
+    cost: float
+    evals: int = 0
+    source: str = "online"  # "online" | "pretune"
+    created: float = dataclasses.field(default_factory=time.time)
+
+    def to_json(self) -> dict:
+        return {
+            "key": self.key.to_json(),
+            "point": self.point,
+            "cost": self.cost,
+            "evals": self.evals,
+            "source": self.source,
+            "created": self.created,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "TuningRecord":
+        return cls(
+            key=TuningKey.from_json(d["key"]),
+            point=dict(d["point"]),
+            cost=float(d["cost"]),
+            evals=int(d.get("evals", 0)),
+            source=str(d.get("source", "online")),
+            created=float(d.get("created", 0.0)),
+        )

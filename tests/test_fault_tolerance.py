@@ -11,6 +11,7 @@ from repro.runtime import TrainJob, Watchdog
 from helpers import run_py
 
 
+@pytest.mark.slow
 def test_resume_identical_trajectory(tmp_path):
     """Uninterrupted run vs (crash at step 14 -> resume) must produce the
     same losses at the same steps (data is pure(seed, step); checkpoint
@@ -48,6 +49,7 @@ def test_watchdog_detects_stragglers():
     assert abs(wd.ewma - 0.10) < 0.01
 
 
+@pytest.mark.slow
 def test_driver_tunes_and_resets_on_straggler(tmp_path):
     """Single-Iteration tuning rides the loop; an injected slowdown after
     tuning completes triggers reset() and re-tuning (paper §2.2 reset)."""
@@ -72,6 +74,8 @@ def test_driver_tunes_and_resets_on_straggler(tmp_path):
     assert len(hist["resets"]) >= 1  # tuning re-entered
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_elastic_restore_across_device_counts(tmp_path):
     """Save on a (2,2) mesh (4 devices), restore+reshard on (4,2) (8 devices):
     params must be bit-identical after the round-trip."""

@@ -47,6 +47,7 @@ def test_state_wanted():
     assert state_wanted("0/pos0/conv", 4) == (None, "dp", None, "tp")
 
 
+@pytest.mark.multidevice
 def test_logical_spec_divisibility_guard():
     """Dims that don't divide the axis product must replicate, not crash."""
     code = """
@@ -68,6 +69,7 @@ print("OK")
 
 
 # ------------------------------------------------------------- collectives
+@pytest.mark.multidevice
 def test_int8_psum_and_topk():
     code = """
 import jax, jax.numpy as jnp, numpy as np
@@ -116,6 +118,7 @@ def test_wire_bytes_model():
 
 
 # ---------------------------------------------------------------- pipeline
+@pytest.mark.multidevice
 def test_gpipe_matches_sequential():
     """4-stage pipeline over a 4-device axis == sequential application."""
     code = """

@@ -3,6 +3,7 @@ label masking, metrics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.models import ExecConfig, Model
@@ -66,6 +67,7 @@ def test_pad_labels_masked():
     assert np.isfinite(float(loss))
 
 
+@pytest.mark.slow
 def test_microbatch_grad_equivalence():
     """Accumulated microbatch gradients == single-shot gradients on the same
     global batch.  (Updated *params* can differ on near-zero-grad leaves:
