@@ -29,6 +29,7 @@ BENCHES = [
     "rb_gauss_seidel",  # §3: the paper's illustrative example (Fig. 1a/1b)
     "kernel_autotune",  # §2.3: block-size tuning on Pallas kernels
     "tuning_warmstart",  # tuning DB: cold vs near-miss vs exact-replay cost
+    "tuning_throughput",  # batched (ask/tell + AOT fan-out) vs sequential tuning
     "step_autotune",  # §2.4: exec modes on a real train step
     "grad_compression",  # DESIGN §7: compressed DP reduction
     "roofline",  # §Roofline report from the dry-run JSONL
@@ -68,7 +69,13 @@ def main(argv=None) -> None:
     ap.add_argument("benches", nargs="*", default=None, help="subset to run")
     ap.add_argument("--smoke", action="store_true", help="reduced CI lane")
     ap.add_argument("--out", type=str, default=None, help="write JSON results here")
+    ap.add_argument(
+        "--jobs", type=int, default=None,
+        help="concurrent AOT compiles for tuning benches (sets REPRO_TUNE_JOBS)",
+    )
     args = ap.parse_args(argv)
+    if args.jobs is not None:
+        os.environ["REPRO_TUNE_JOBS"] = str(args.jobs)
 
     which = args.benches or BENCHES
     results = [_run_one(name, args.smoke) for name in which]

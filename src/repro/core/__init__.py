@@ -6,10 +6,13 @@ search-space codecs, and the cost backends used across the framework.
 from .autotuning import Autotuning
 from .costs import (
     TPU_V5E,
+    ExecutableCache,
     HardwareSpec,
     RooflineTerms,
     RuntimeCost,
+    aot_compile,
     collective_bytes,
+    compile_fanout,
     hlo_flops_bytes,
     roofline_terms,
 )
@@ -34,6 +37,9 @@ __all__ = [
     "ChoiceDim",
     "TunedStep",
     "RuntimeCost",
+    "ExecutableCache",
+    "aot_compile",
+    "compile_fanout",
     "HardwareSpec",
     "RooflineTerms",
     "TPU_V5E",

@@ -152,19 +152,36 @@ class Autotuning:
     def point_vector(self) -> list:
         return list(self._point.values())
 
+    def _history_best(self):
+        """(point, cost) of the best delivered measurement, (None, inf) if
+        none.  The optimizer's own best can lag behind this by up to one
+        batch round: the ``run`` adapter buffers costs until a full
+        ask/tell round is delivered, so a driver that stops mid-round
+        (e.g. a short serving stream) would otherwise under-report."""
+        best_p, best_c = None, np.inf
+        for p, c in self._history:
+            if c < best_c:
+                best_p, best_c = p, c
+        return best_p, best_c
+
     @property
     def best_point(self) -> dict:
         if self._db_hit is not None:
             return dict(self._db_hit.point)
-        if np.isfinite(self.optimizer.best_cost):
+        hist_p, hist_c = self._history_best()
+        opt_c = self.optimizer.best_cost
+        if np.isfinite(opt_c) and opt_c <= hist_c:
             return self.space.decode(self.optimizer.best_solution)
+        if hist_p is not None:
+            return dict(hist_p)
         return dict(self._point)
 
     @property
     def best_cost(self) -> float:
         if self._db_hit is not None:
             return float(self._db_hit.cost)
-        return self.optimizer.best_cost
+        _, hist_c = self._history_best()
+        return float(min(self.optimizer.best_cost, hist_c))
 
     @property
     def num_evals(self) -> int:
@@ -173,6 +190,16 @@ class Autotuning:
     @property
     def num_measurements(self) -> int:
         return self._measurements
+
+    @property
+    def num_crashed(self) -> int:
+        """Distinct visited candidates whose (final) cost was non-finite —
+        i.e. configurations that crashed or were rejected by the measurement
+        layer.  Surfaced on committed tuning records."""
+        seen: dict = {}
+        for p, c in self._history:
+            seen[self.space.key(p)] = c
+        return sum(1 for c in seen.values() if not np.isfinite(c))
 
     @property
     def history(self) -> list:
@@ -312,6 +339,79 @@ class Autotuning:
         (paper ``entireExec``)."""
         while not self.finished:
             self.single_exec(func, *args, **kwargs)
+        return self.point
+
+    # ----------------------------------------------------------- batch mode
+    def entire_exec_batch(self, measure_batch: Callable) -> dict:
+        """Entire Execution over the optimizer's batch protocol.
+
+        Per round, :meth:`NumericalOptimizer.ask` yields the full set of
+        candidates the optimizer needs next (CSA's m probes, NM's simplex).
+        The round is **deduplicated by decoded point** — duplicates within the
+        round, and (with ``cache=True``) candidates revisited from earlier
+        rounds, are never re-measured — and the surviving unique points are
+        handed to ``measure_batch(points) -> costs`` in one call, so the
+        measurement layer can compile them concurrently.  ``ignore``
+        stabilization calls are issued per round on the same unique points and
+        discarded, matching the sequential modes' per-candidate accounting.
+
+        The candidate trajectory, history, and final point are identical to
+        :meth:`entire_exec` with a deterministic cost function (same seed ⇒
+        same visited points); only the measurement schedule changes.  With a
+        *speculative* optimizer (``NelderMead(speculative=True)``) the
+        optimizer's internal ``evaluations`` budget stays bit-identical to
+        the sequential run, but the driver-side ``num_evals``/``history``
+        (and hence a committed record's ``evals``/``crashed``) honestly count
+        every point that was actually measured, including speculative probes
+        the optimizer discarded.
+        """
+        while not self.finished:
+            zs = self.optimizer.ask()
+            if not zs:
+                break
+            points = [self.space.decode(z) for z in zs]
+            keys = [self.space.key(p) for p in points]
+            self._z = zs[0]
+            self._point = dict(points[0])
+            # unique decoded points, in first-seen order
+            unique: dict = {}
+            for k, p in zip(keys, points):
+                unique.setdefault(k, p)
+            to_measure = [
+                k for k in unique
+                if not (self._use_cache and k in self._cost_cache)
+            ]
+            measured: dict = {}
+            if to_measure:
+                pts = [dict(unique[k]) for k in to_measure]
+                for _ in range(self.ignore):  # stabilization (paper `ignore`)
+                    measure_batch([dict(p) for p in pts])
+                    self._measurements += len(pts)
+                costs = list(measure_batch([dict(p) for p in pts]))
+                if len(costs) != len(pts):
+                    raise ValueError(
+                        f"measure_batch returned {len(costs)} costs for {len(pts)} points"
+                    )
+                self._measurements += len(pts)
+                measured = {k: float(c) for k, c in zip(to_measure, costs)}
+            full = []
+            for k, p in zip(keys, points):
+                # measured this round, or answered by the cross-round cache
+                c = measured[k] if k in measured else self._cost_cache[k]
+                if self._use_cache:
+                    self._cost_cache[k] = c
+                self._evals += 1
+                self._history.append((dict(p), float(c)))
+                if self.verbose:
+                    print(f"[patsma] eval#{self._evals} {p} -> {c:.6g}")
+                full.append(c)
+            self.optimizer.tell(full)
+        # expose the final solution as the current point (as the sequential
+        # staging does once the optimizer ends) and persist it
+        if self._db_hit is None and self.optimizer.is_end():
+            self._z = self.optimizer.best_solution
+            self._point = self.space.decode(self._z)
+        self.commit()
         return self.point
 
     @staticmethod

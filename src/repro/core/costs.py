@@ -2,6 +2,13 @@
 
 * :class:`RuntimeCost` — the paper's Runtime mode: wall time of a callable,
   with ``jax.block_until_ready`` so asynchronous dispatch is included.
+* :class:`ExecutableCache` + :func:`aot_compile` + :func:`compile_fanout` —
+  the batched measurement layer: AOT ``jit(...).lower().compile()`` fanned out
+  over a thread pool (XLA compilation releases the GIL) with a process-level
+  cache of compiled executables, so revisited candidates — across tuning
+  rounds, optimizer resets, and pretune grid cells — never recompile.
+  Wall-clock *measurement* stays strictly serial for timing fidelity; only
+  compilation overlaps.
 * :class:`AnalyticCost` — beyond-paper: roofline terms derived from an XLA
   ``lowered``/``compiled`` artifact.  This is what lets the *distributed
   config* search run on a CPU-only container (§Perf hillclimb): the cost of a
@@ -16,13 +23,19 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import threading
 import time
-from typing import Callable, Optional
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Hashable, List, Optional, Sequence, Tuple
 
 __all__ = [
     "HardwareSpec",
     "TPU_V5E",
     "RuntimeCost",
+    "ExecutableCache",
+    "aot_compile",
+    "compile_fanout",
     "roofline_terms",
     "collective_bytes",
     "hlo_flops_bytes",
@@ -70,6 +83,146 @@ class RuntimeCost:
             times.append(time.perf_counter() - t0)
         times.sort()
         return times[len(times) // 2]
+
+
+# ----------------------------------------------------------- AOT compilation
+def aot_compile(fn: Callable, *args, **kwargs):
+    """Ahead-of-time compile ``fn`` for the given example arguments.
+
+    Returns the compiled executable (callable with arguments of the same
+    shapes/dtypes).  Unlike first-call ``jax.jit`` dispatch, the trace +
+    XLA compile happen *now*, so a driver can overlap many of these on a
+    thread pool before any measurement starts.
+    """
+    import jax
+
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    return jitted.lower(*args, **kwargs).compile()
+
+
+class ExecutableCache:
+    """Thread-safe process-level cache of compiled executables.
+
+    Keys are caller-chosen hashables (the tuning layer uses the context
+    fingerprint + decoded knobs).  Values are whatever ``build`` returns —
+    or the exception it raised: an illegal tile stays illegal, so a revisited
+    crashing candidate should not pay a recompile either.  ``cache_failures``
+    (a predicate on the exception) can veto that for failures that may be
+    transient — e.g. RESOURCE_EXHAUSTED under concurrent compile load — so a
+    revisit rebuilds instead of replaying a stale error; ``None`` caches every
+    failure.  Concurrent requests for the same key share one build (per-key
+    future).
+
+    Stats: ``hits`` / ``misses`` count lookups, ``recompiles`` counts builds
+    of a key that had already been built once (only possible after an LRU
+    eviction — the acceptance gate for the batched tuner is that this stays
+    at zero on the smoke grid; an uncached transient failure counts as a
+    plain miss on retry, not a recompile).
+    """
+
+    def __init__(
+        self,
+        maxsize: int = 1024,
+        *,
+        cache_failures: Optional[Callable[[BaseException], bool]] = None,
+    ) -> None:
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self._cache_failures = cache_failures
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Hashable, Future]" = OrderedDict()
+        self._built: set = set()  # keys ever built (recompile accounting)
+        self.hits = 0
+        self.misses = 0
+        self.recompiles = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get_or_build(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the cached executable for ``key``, building it (once) on a
+        miss.  Build failures are returned (and cached) as the exception
+        object rather than raised — the measurement layer classifies them."""
+        with self._lock:
+            fut = self._entries.get(key)
+            if fut is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                owner = False
+            else:
+                fut = Future()
+                self._entries[key] = fut
+                self.misses += 1
+                if key in self._built:
+                    self.recompiles += 1
+                self._built.add(key)
+                owner = True
+                while len(self._entries) > self.maxsize:
+                    self._entries.popitem(last=False)
+                    self.evictions += 1
+        if owner:
+            try:
+                result: Any = build()
+            except Exception as e:  # cached: deterministic for a fixed context
+                result = e
+                if self._cache_failures is not None and not self._cache_failures(e):
+                    # possibly transient: answer current waiters with the
+                    # error but drop the entry so a revisit rebuilds
+                    with self._lock:
+                        if self._entries.get(key) is fut:
+                            del self._entries[key]
+                        self._built.discard(key)
+            except BaseException as e:
+                # never cache (e.g. KeyboardInterrupt mid-compile would
+                # poison the key): drop the entry, unblock waiters, propagate
+                with self._lock:
+                    if self._entries.get(key) is fut:
+                        del self._entries[key]
+                    self._built.discard(key)
+                fut.set_result(e)
+                raise
+            fut.set_result(result)
+        return fut.result()
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "size": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+                "recompiles": self.recompiles,
+                "evictions": self.evictions,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._built.clear()
+            self.hits = self.misses = self.recompiles = self.evictions = 0
+
+
+def compile_fanout(
+    items: Sequence[Tuple[Hashable, Callable[[], Any]]],
+    *,
+    cache: Optional[ExecutableCache] = None,
+    jobs: int = 1,
+) -> List[Any]:
+    """Compile ``items`` = [(key, build), ...] concurrently, deduped through
+    ``cache``.  Returns one executable-or-exception per item, in order.
+
+    XLA compilation releases the GIL, so a thread pool genuinely overlaps the
+    expensive part; Python tracing inside each ``build`` stays GIL-bound.
+    """
+    if cache is None:
+        cache = ExecutableCache(maxsize=max(len(items), 1))
+    if jobs <= 1 or len(items) <= 1:
+        return [cache.get_or_build(k, b) for k, b in items]
+    with ThreadPoolExecutor(max_workers=min(jobs, len(items))) as pool:
+        futs = [pool.submit(cache.get_or_build, k, b) for k, b in items]
+        return [f.result() for f in futs]
 
 
 # --------------------------------------------------------------------- HLO

@@ -20,19 +20,23 @@ and the acceptance temperature ``T_ac`` is steered so that the variance of
 rule recommended in the CSA paper: variance below target → multiply ``T_ac``
 by ``(1 - alpha)``, above → ``(1 + alpha)``.
 
-Staging (paper §2.2): ``run(cost)`` is a state machine —
+Rounds are natural batches — the CSA paper runs its m solvers in parallel by
+construction — so the batch protocol maps directly:
 
-    INIT   : emit the m initial random solutions one per call;
-    PROBE  : per CSA iteration, emit one probe per solver (m calls); when the
-             last probe's cost arrives, perform the coupled acceptance step,
-             update temperatures, advance the iteration counter;
-    DONE   : after ``max_iter`` iterations, keep returning the best solution.
+    ask()  : the m initial random solutions (INIT round) or the m probes of
+             the current iteration, generated in solver order;
+    tell() : store the m costs, perform the coupled acceptance step, update
+             temperatures, advance the iteration counter.
 
-Evaluation count therefore matches paper Eq. (1):
+The sequential ``run(cost)`` staging (paper §2.2) is the base-class adapter
+over ask/tell and emits the exact same candidate sequence.  Evaluation count
+therefore still matches paper Eq. (1):
 ``num_eval = max_iter * (ignore + 1) * num_opt`` (the INIT round counts as
 iteration 1; ``ignore`` is applied by the Autotuning driver).
 """
 from __future__ import annotations
+
+from typing import List, Optional
 
 import numpy as np
 
@@ -84,12 +88,12 @@ class CSA(NumericalOptimizer):
         self._tgen = self._tgen0
         self._tac = self._tac0
         self._iter = 1  # INIT round is iteration 1 (keeps Eq.1 exact)
-        self._idx = 0  # which solver's point is in flight
         self._phase = _INIT
         self._best_x = self._x[0].copy()
         self._best_e = np.inf
         # target acceptance-probability variance (99% of max, CSA paper §V)
         self._sigma_d2 = 0.99 * (self._m - 1) / self._m**2
+        self._clear_batch_state()
 
     # ------------------------------------------------------------- interface
     def get_num_points(self) -> int:
@@ -127,8 +131,8 @@ class CSA(NumericalOptimizer):
     def seed(self, z0, spread: float = 0.2) -> bool:
         """Warm start: place solver 0 exactly at ``z0`` and scatter the other
         coupled solvers around it (Cauchy-free gaussian cloud, wrapped into the
-        toroidal domain).  Only valid before the first cost is delivered."""
-        if self._phase != _INIT or self._idx != 0:
+        toroidal domain).  Only valid before the first candidate is emitted."""
+        if self._phase != _INIT or self._pending_batch is not None:
             return False
         z0 = np.asarray(z0, dtype=float).reshape(-1)
         if z0.shape[0] != self._dim:
@@ -165,58 +169,38 @@ class CSA(NumericalOptimizer):
         self._tgen = self._tgen0
         self._tac = self._tac0
         self._iter = 1
-        self._idx = 0
         self._phase = _INIT
+        self._clear_batch_state()
 
-    # ------------------------------------------------------------------- run
-    def run(self, cost: float) -> np.ndarray:
-        if self._phase == _DONE:
-            return self.best_solution
-
+    # -------------------------------------------------------- batch protocol
+    def _next_batch(self) -> Optional[List[np.ndarray]]:
         if self._phase == _INIT:
-            return self._run_init(cost)
-        return self._run_probe(cost)
+            return [self._x[i].copy() for i in range(self._m)]
+        # _PROBE: one probe per solver, generated in solver order (the same
+        # RNG draw order the sequential staging used)
+        return [self._gen_probe(i) for i in range(self._m)]
+
+    def _consume_batch(self, points: List[np.ndarray], costs: List[float]) -> None:
+        if self._phase == _INIT:
+            for i in range(self._m):
+                self._e[i] = costs[i]
+                self._note_best(self._x[i], costs[i])
+        else:
+            for i in range(self._m):
+                self._probe_e[i] = costs[i]
+                self._note_best(self._probes[i], costs[i])
+            self._coupled_acceptance()
+        self._iter += 1
+        if self._iter > self._max_iter:
+            self._phase = _DONE
+            return
+        self._phase = _PROBE
+        self._tgen = self._tgen0 / self._iter  # T_gen_k = T_gen0 / k
 
     def _note_best(self, x: np.ndarray, e: float) -> None:
         if e < self._best_e:
             self._best_e = e
             self._best_x = x.copy()
-
-    def _run_init(self, cost: float) -> np.ndarray:
-        # deliver cost of previously returned initial point (if any)
-        cost = float(cost) if np.isfinite(cost) else np.inf
-        if self._idx > 0:
-            self._e[self._idx - 1] = cost
-            self._note_best(self._x[self._idx - 1], cost)
-        if self._idx < self._m:
-            out = self._x[self._idx].copy()
-            self._idx += 1
-            return out
-        # all initial points evaluated → INIT round was iteration 1
-        return self._finish_round_and_emit(first_cost_already_stored=True)
-
-    def _run_probe(self, cost: float) -> np.ndarray:
-        cost = float(cost) if np.isfinite(cost) else np.inf  # crashed candidate
-        self._probe_e[self._idx - 1] = cost
-        self._note_best(self._probes[self._idx - 1], cost)
-        if self._idx < self._m:
-            out = self._gen_probe(self._idx)
-            self._idx += 1
-            return out
-        return self._finish_round_and_emit(first_cost_already_stored=False)
-
-    def _finish_round_and_emit(self, first_cost_already_stored: bool) -> np.ndarray:
-        if not first_cost_already_stored:
-            self._coupled_acceptance()
-        self._iter += 1
-        if self._iter > self._max_iter:
-            self._phase = _DONE
-            return self.best_solution
-        # begin next probe round
-        self._phase = _PROBE
-        self._tgen = self._tgen0 / self._iter  # T_gen_k = T_gen0 / k
-        self._idx = 1
-        return self._gen_probe(0)
 
     def _gen_probe(self, i: int) -> np.ndarray:
         u = self._rng.uniform(size=self._dim)
@@ -226,18 +210,27 @@ class CSA(NumericalOptimizer):
         return y.copy()
 
     def _coupled_acceptance(self) -> None:
+        """Vectorized coupled-acceptance step (numpy masks, no solver loop).
+
+        RNG-stream compatible with the historical per-solver staging: a
+        uniform is drawn only for finite, *uphill* probes (downhill moves are
+        accepted unconditionally; crashed configurations are never adopted),
+        in solver order — ``uniform(size=k)`` yields the same doubles as k
+        sequential draws, so trajectories for a given seed are unchanged.
+        """
         e = self._e
         emax = float(np.max(e[np.isfinite(e)])) if np.any(np.isfinite(e)) else 0.0
         ex = np.exp((np.where(np.isfinite(e), e, emax) - emax) / max(self._tac, 1e-300))
         gamma = float(np.sum(ex))
         probs = ex / gamma  # A_i, sum to 1
-        for i in range(self._m):
-            if not np.isfinite(self._probe_e[i]):
-                continue  # never move onto a crashed configuration
-            downhill = self._probe_e[i] < self._e[i]
-            if downhill or self._rng.uniform() < probs[i]:
-                self._x[i] = self._probes[i]
-                self._e[i] = self._probe_e[i]
+        finite = np.isfinite(self._probe_e)  # never move onto a crashed config
+        downhill = self._probe_e < self._e
+        need_u = finite & ~downhill  # uphill probes gamble on coupled A_i
+        u = np.full(self._m, np.inf)
+        u[need_u] = self._rng.uniform(size=int(np.count_nonzero(need_u)))
+        accept = finite & (downhill | (u < probs))
+        self._x[accept] = self._probes[accept]
+        self._e[accept] = self._probe_e[accept]
         # variance steering of T_ac toward sigma_D^2 = 0.99*(m-1)/m^2
         sigma2 = float(np.mean(probs**2) - (1.0 / self._m) ** 2)
         if sigma2 < self._sigma_d2:

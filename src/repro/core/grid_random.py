@@ -4,8 +4,14 @@ The paper's interface (§2.2) is explicitly designed so "other optimization
 methods can be incorporated as a new class".  These two are used as controls
 in the benchmarks (exhaustive truth for small spaces; random-search baseline
 for the CSA-vs-NM comparisons).
+
+Both have trivially perfect batch shapes: the whole remaining sweep is one
+``ask()`` round (no point depends on another's cost), so a batched driver can
+compile every candidate concurrently.
 """
 from __future__ import annotations
+
+from typing import List, Optional
 
 import numpy as np
 
@@ -23,7 +29,8 @@ class GridSearch(NumericalOptimizer):
         axes = [np.linspace(-1.0, 1.0, self._ppd) for _ in range(dim)]
         grid = np.meshgrid(*axes, indexing="ij")
         self._pts = np.stack([g.reshape(-1) for g in grid], axis=-1)
-        self._i = 0
+        self._i = 0  # next unevaluated grid index
+        self._done = False
         self._best_x = self._pts[0].copy()
         self._best_e = np.inf
 
@@ -34,7 +41,7 @@ class GridSearch(NumericalOptimizer):
         return self._dim
 
     def is_end(self) -> bool:
-        return self._i > len(self._pts)
+        return self._done
 
     @property
     def best_solution(self) -> np.ndarray:
@@ -46,20 +53,25 @@ class GridSearch(NumericalOptimizer):
 
     def reset(self, level: int = 0) -> None:
         self._i = 0
+        self._done = False
         if level >= 2:
             self._best_e = np.inf
+        self._clear_batch_state()
 
-    def run(self, cost: float) -> np.ndarray:
-        if self._i > 0 and self._i <= len(self._pts) and np.isfinite(cost):
-            if cost < self._best_e:
-                self._best_e = float(cost)
-                self._best_x = self._pts[self._i - 1].copy()
-        if self._i < len(self._pts):
-            out = self._pts[self._i].copy()
+    def _next_batch(self) -> Optional[List[np.ndarray]]:
+        if self._i >= len(self._pts):
+            self._done = True
+            return None
+        return [p.copy() for p in self._pts[self._i:]]
+
+    def _consume_batch(self, points: List[np.ndarray], costs: List[float]) -> None:
+        for p, c in zip(points, costs):
             self._i += 1
-            return out
-        self._i = len(self._pts) + 1
-        return self.best_solution
+            if np.isfinite(c) and c < self._best_e:
+                self._best_e = float(c)
+                self._best_x = p.copy()
+        if self._i >= len(self._pts):
+            self._done = True
 
 
 class RandomSearch(NumericalOptimizer):
@@ -71,7 +83,7 @@ class RandomSearch(NumericalOptimizer):
         self._seed = seed
         self._rng = np.random.default_rng(seed)
         self._i = 0
-        self._last = None
+        self._done = False
         self._best_x = np.zeros(dim)
         self._best_e = np.inf
 
@@ -82,7 +94,7 @@ class RandomSearch(NumericalOptimizer):
         return self._dim
 
     def is_end(self) -> bool:
-        return self._i > self._max
+        return self._done
 
     @property
     def best_solution(self) -> np.ndarray:
@@ -94,18 +106,28 @@ class RandomSearch(NumericalOptimizer):
 
     def reset(self, level: int = 0) -> None:
         self._i = 0
+        self._done = False
         if level >= 2:
             self._rng = np.random.default_rng(self._seed)
             self._best_e = np.inf
+        self._clear_batch_state()
 
-    def run(self, cost: float) -> np.ndarray:
-        if self._last is not None and np.isfinite(cost) and cost < self._best_e:
-            self._best_e = float(cost)
-            self._best_x = self._last.copy()
-        if self._i < self._max:
-            self._last = self._rng.uniform(-1.0, 1.0, size=self._dim)
+    def _next_batch(self) -> Optional[List[np.ndarray]]:
+        if self._i >= self._max:
+            self._done = True
+            return None
+        # draw the remaining samples in sequence order (same stream as the
+        # one-per-call staging)
+        return [
+            self._rng.uniform(-1.0, 1.0, size=self._dim)
+            for _ in range(self._max - self._i)
+        ]
+
+    def _consume_batch(self, points: List[np.ndarray], costs: List[float]) -> None:
+        for p, c in zip(points, costs):
             self._i += 1
-            return self._last.copy()
-        self._i = self._max + 1
-        self._last = None
-        return self.best_solution
+            if np.isfinite(c) and c < self._best_e:
+                self._best_e = float(c)
+                self._best_x = p.copy()
+        if self._i >= self._max:
+            self._done = True

@@ -2,19 +2,36 @@
 
 Nelder & Mead, "A Simplex Method for Function Minimization", Comput J 1965.
 
-Implements the standard reflection/expansion/contraction/shrink moves as a
-``run(cost)`` state machine (one cost evaluation per call), matching PATSMA's
-constructor ``NelderMead(int dim, double error, int max_iter = 0)``:
+Implements the standard reflection/expansion/contraction/shrink moves over
+the batch ``ask()``/``tell()`` protocol, matching PATSMA's constructor
+``NelderMead(int dim, double error, int max_iter = 0)``:
 
   * ``error``    — stop when the simplex cost spread ``max_i |E_i - E_best|``
                    falls below it;
   * ``max_iter`` — maximum number of cost evaluations (0 = unbounded), so that
                    paper Eq. (2) holds: ``num_eval = max_iter * (ignore + 1)``.
 
+Natural batches: the initial simplex (``dim + 1`` vertices) and a shrink round
+(``dim`` vertices) are emitted whole; reflect/expand/contract probes are
+single-point batches because each depends on the previous cost.  The
+sequential ``run(cost)`` staging (one cost per call) is the base-class adapter
+over ask/tell and emits the identical candidate sequence.
+
+``speculative=True`` (beyond-paper, default off) widens the reflect batch to
+``[x_r, x_e, x_c_out, x_c_in]`` — all four are computable before the
+reflection cost is known — so a batched driver can compile/measure them
+concurrently.  ``tell`` then *consumes* only the costs the sequential
+algorithm would have looked at (the rest are discarded), keeping the simplex
+trajectory, best point, and the ``evaluations`` budget bit-identical to the
+non-speculative run; the extra measurements are pure compile/measure overlap
+paid by the driver (whose own measurement/eval counters do record them).
+
 Solutions live in ``[-1, 1]^dim`` and are clipped (NM is a local method; PATSMA
 wraps only CSA).
 """
 from __future__ import annotations
+
+from typing import List, Optional
 
 import numpy as np
 
@@ -39,6 +56,7 @@ class NelderMead(NumericalOptimizer):
         sigma: float = 0.5,
         init_scale: float = 0.5,
         seed: int = 0,
+        speculative: bool = False,
     ) -> None:
         if dim < 1:
             raise ValueError(f"dim must be >= 1, got {dim}")
@@ -49,6 +67,7 @@ class NelderMead(NumericalOptimizer):
         self._alpha, self._gamma, self._beta, self._sigma = alpha, gamma, beta, sigma
         self._init_scale = init_scale
         self._seed = seed
+        self._speculative = bool(speculative)
         self._rng = np.random.default_rng(seed)
         self._full_init()
 
@@ -63,14 +82,17 @@ class NelderMead(NumericalOptimizer):
             )[()]
         self._costs = np.full(n + 1, np.inf)
         self._stage = _INIT
-        self._idx = 0  # vertex index being evaluated (INIT / SHRINK)
+        self._init_idx = 0  # vertices whose cost is known (INIT staging)
         self._evals = 0
-        self._pending: np.ndarray | None = None  # point whose cost we await
-        self._x_r: np.ndarray | None = None
+        self._x_r: Optional[np.ndarray] = None  # reflection point in flight
         self._e_r: float = np.inf
-        self._shrink_queue: list[int] = []
+        self._centroid_c: Optional[np.ndarray] = None  # centroid for _x_r
+        self._x_e: Optional[np.ndarray] = None  # staged expansion point
+        self._x_c: Optional[np.ndarray] = None  # staged contraction point
+        self._shrink_queue: list = []
         self._best_x = self._simplex[0].copy()
         self._best_e = np.inf
+        self._clear_batch_state()
 
     # ------------------------------------------------------------- interface
     def get_num_points(self) -> int:
@@ -94,6 +116,10 @@ class NelderMead(NumericalOptimizer):
     def evaluations(self) -> int:
         return self._evals
 
+    @property
+    def speculative(self) -> bool:
+        return self._speculative
+
     def print(self) -> None:  # noqa: A003 - paper API name
         print(
             f"NelderMead(dim={self._dim}) evals={self._evals} stage={self._stage} "
@@ -102,8 +128,8 @@ class NelderMead(NumericalOptimizer):
 
     def seed(self, z0, spread: float = 0.2) -> bool:
         """Warm start: build the initial simplex around ``z0`` instead of a
-        random point.  Only valid before the first cost is delivered."""
-        if self._stage != _INIT or self._idx != 0 or self._pending is not None:
+        random point.  Only valid before the first candidate is emitted."""
+        if self._stage != _INIT or self._init_idx != 0 or self._pending_batch is not None:
             return False
         z0 = np.asarray(z0, dtype=float).reshape(-1)
         if z0.shape[0] != self._dim:
@@ -141,25 +167,9 @@ class NelderMead(NumericalOptimizer):
         self._best_x = best_x
         self._best_e = best_e  # level 0 retains the solutions found (§2.2)
 
-    # ------------------------------------------------------------------- run
-    def run(self, cost: float) -> np.ndarray:
-        if self._stage == _DONE:
-            return self.best_solution
-        cost = float(cost) if np.isfinite(cost) else np.inf
-
-        if self._pending is not None:
-            self._evals += 1
-            if cost < self._best_e:
-                self._best_e = cost
-                self._best_x = self._pending.copy()
-            self._dispatch_cost(cost)
-            if self._stage == _DONE:
-                return self.best_solution
-            if self._exhausted():
-                self._stage = _DONE
-                return self.best_solution
-
-        return self._emit_next()
+    # -------------------------------------------------------- batch protocol
+    def _remaining(self) -> Optional[int]:
+        return (self._max_evals - self._evals) if self._max_evals > 0 else None
 
     def _exhausted(self) -> bool:
         return self._max_evals > 0 and self._evals >= self._max_evals
@@ -170,96 +180,156 @@ class NelderMead(NumericalOptimizer):
             return np.inf
         return float(np.max(finite) - np.min(finite))
 
-    # ------------------------------------------------------------ transitions
-    def _emit(self, x: np.ndarray) -> np.ndarray:
-        self._pending = x.copy()
-        return x.copy()
-
-    def _emit_next(self) -> np.ndarray:
-        if self._pending is not None:
-            # dispatch staged the next point itself (expansion / contraction)
-            return self._pending.copy()
+    def _next_batch(self) -> Optional[List[np.ndarray]]:
+        rem = self._remaining()
+        if rem is not None and rem <= 0:
+            self._stage = _DONE
+            return None
         if self._stage == _INIT:
-            return self._emit(self._simplex[self._idx])
+            pts = [self._simplex[i].copy() for i in range(self._init_idx, self._dim + 1)]
+            return pts if rem is None else pts[:rem]
         if self._stage == _SHRINK:
-            return self._emit(self._simplex[self._shrink_queue[0]])
-        # start a fresh NM iteration: order simplex, reflect the worst
+            pts = [self._simplex[i].copy() for i in self._shrink_queue]
+            return pts if rem is None else pts[:rem]
+        if self._stage == _EXPAND:
+            return [self._x_e.copy()]
+        if self._stage == _CONTRACT:
+            return [self._x_c.copy()]
+        # _REFLECT: start a fresh NM iteration — order simplex, reflect worst
         self._order()
         if self._spread() < self._error:
             self._stage = _DONE
-            return self.best_solution
+            return None
         c = self._centroid()
+        self._centroid_c = c
         self._x_r = self._clip(c + self._alpha * (c - self._simplex[-1]))
-        self._stage = _REFLECT
-        return self._emit(self._x_r)
+        self._e_r = np.inf
+        if self._speculative and (rem is None or rem >= 2):
+            # expansion and both contraction candidates depend only on the
+            # simplex and x_r — compute them now so the driver can overlap
+            # their compilation/measurement with the reflection's
+            x_e = self._clip(c + self._gamma * (self._x_r - c))
+            x_co = self._clip(c + self._beta * (self._x_r - c))
+            x_ci = self._clip(c - self._beta * (c - self._simplex[-1]))
+            return [self._x_r.copy(), x_e, x_co, x_ci]
+        return [self._x_r.copy()]
 
-    def _dispatch_cost(self, cost: float) -> None:
+    def _consume_batch(self, points: List[np.ndarray], costs: List[float]) -> None:
         if self._stage == _INIT:
-            self._costs[self._idx] = cost
-            self._idx += 1
-            self._pending = None
-            if self._idx > self._dim:
-                self._begin_iteration()  # full simplex known; next emit reflects
-            return
-
-        if self._stage == _REFLECT:
-            self._e_r = cost
-            c = self._centroid()
-            if cost < self._costs[0]:
-                # try expansion
-                x_e = self._clip(c + self._gamma * (self._x_r - c))
-                if np.allclose(x_e, self._x_r):
-                    self._accept(self._x_r, cost)
-                    self._begin_iteration()
-                else:
-                    self._stage = _EXPAND
-                    self._pending = x_e
-                return
-            if cost < self._costs[-2]:
-                self._accept(self._x_r, cost)
+            for x, c in zip(points, costs):
+                self._consume_one(x, c)
+                self._costs[self._init_idx] = c
+                self._init_idx += 1
+                if self._exhausted():
+                    self._stage = _DONE
+                    return
+            if self._init_idx > self._dim:
                 self._begin_iteration()
-                return
-            # contraction (outside if reflect better than worst, else inside)
-            if cost < self._costs[-1]:
-                x_c = self._clip(c + self._beta * (self._x_r - c))
-            else:
-                x_c = self._clip(c - self._beta * (c - self._simplex[-1]))
-            self._stage = _CONTRACT
-            self._pending = x_c
-            return
-
-        if self._stage == _EXPAND:
-            if cost < self._e_r:
-                self._accept(self._pending, cost)
-            else:
-                self._accept(self._x_r, self._e_r)
-            self._begin_iteration()
-            return
-
-        if self._stage == _CONTRACT:
-            if cost < min(self._e_r, self._costs[-1]):
-                self._accept(self._pending, cost)
-                self._begin_iteration()
-                return
-            # shrink toward the best vertex
-            for i in range(1, self._dim + 1):
-                self._simplex[i] = self._clip(
-                    self._simplex[0] + self._sigma * (self._simplex[i] - self._simplex[0])
-                )
-                self._costs[i] = np.inf
-            self._shrink_queue = list(range(1, self._dim + 1))
-            self._stage = _SHRINK
-            self._pending = None
             return
 
         if self._stage == _SHRINK:
-            i = self._shrink_queue.pop(0)
-            self._costs[i] = cost
+            for x, c in zip(points, costs):
+                i = self._shrink_queue.pop(0)
+                self._consume_one(x, c)
+                self._costs[i] = c
+                if self._exhausted():
+                    self._stage = _DONE
+                    return
             if not self._shrink_queue:
                 self._begin_iteration()
-            else:
-                self._pending = None
             return
+
+        if self._stage == _EXPAND:
+            c = costs[0]
+            self._consume_one(points[0], c)
+            if c < self._e_r:
+                self._accept(self._x_e, c)
+            else:
+                self._accept(self._x_r, self._e_r)
+            self._begin_iteration()
+            self._check_budget()
+            return
+
+        if self._stage == _CONTRACT:
+            c = costs[0]
+            self._consume_one(points[0], c)
+            self._contract_decide(self._x_c, c)
+            self._check_budget()
+            return
+
+        # _REFLECT (single or speculative batch)
+        c_r = costs[0]
+        self._consume_one(points[0], c_r)
+        self._e_r = c_r
+        if self._exhausted():
+            self._stage = _DONE
+            return
+        spec = len(points) > 1
+        c = self._centroid_c
+        if c_r < self._costs[0]:
+            # try expansion
+            x_e = self._clip(c + self._gamma * (self._x_r - c))
+            if np.allclose(x_e, self._x_r):
+                self._accept(self._x_r, c_r)
+                self._begin_iteration()
+            elif spec:
+                c_e = costs[1]
+                self._consume_one(points[1], c_e)
+                if c_e < self._e_r:
+                    self._accept(x_e, c_e)
+                else:
+                    self._accept(self._x_r, self._e_r)
+                self._begin_iteration()
+                self._check_budget()
+            else:
+                self._x_e = x_e
+                self._stage = _EXPAND
+            return
+        if c_r < self._costs[-2]:
+            self._accept(self._x_r, c_r)
+            self._begin_iteration()
+            return
+        # contraction (outside if reflect better than worst, else inside)
+        outside = c_r < self._costs[-1]
+        if outside:
+            x_c = self._clip(c + self._beta * (self._x_r - c))
+        else:
+            x_c = self._clip(c - self._beta * (c - self._simplex[-1]))
+        if spec:
+            i = 2 if outside else 3
+            c_c = costs[i]
+            self._consume_one(points[i], c_c)
+            self._contract_decide(x_c, c_c)
+            self._check_budget()
+        else:
+            self._x_c = x_c
+            self._stage = _CONTRACT
+        return
+
+    # ------------------------------------------------------------ transitions
+    def _consume_one(self, x: np.ndarray, cost: float) -> None:
+        self._evals += 1
+        if cost < self._best_e:
+            self._best_e = cost
+            self._best_x = np.array(x, dtype=float, copy=True)
+
+    def _check_budget(self) -> None:
+        if self._exhausted():
+            self._stage = _DONE
+
+    def _contract_decide(self, x_c: np.ndarray, cost: float) -> None:
+        if cost < min(self._e_r, self._costs[-1]):
+            self._accept(x_c, cost)
+            self._begin_iteration()
+            return
+        # shrink toward the best vertex
+        for i in range(1, self._dim + 1):
+            self._simplex[i] = self._clip(
+                self._simplex[0] + self._sigma * (self._simplex[i] - self._simplex[0])
+            )
+            self._costs[i] = np.inf
+        self._shrink_queue = list(range(1, self._dim + 1))
+        self._stage = _SHRINK
 
     def _accept(self, x: np.ndarray, cost: float) -> None:
         """Replace the worst vertex."""
@@ -267,13 +337,13 @@ class NelderMead(NumericalOptimizer):
         self._costs[-1] = cost
 
     def _begin_iteration(self) -> None:
-        """Mark that the next emit starts a fresh order/reflect cycle."""
+        """Mark that the next batch starts a fresh order/reflect cycle."""
         self._stage = _REFLECT
-        self._pending = None
         self._x_r = None
         self._e_r = np.inf
-        # _emit_next() recognises a fresh cycle because _pending is None and
-        # stage is _REFLECT with _x_r unset → it orders and reflects.
+        self._x_e = None
+        self._x_c = None
+        self._centroid_c = None
 
     def _order(self) -> None:
         order = np.argsort(self._costs, kind="stable")

@@ -17,6 +17,26 @@ next candidate to test.  The first call's cost argument is ignored.  Once the
 optimization has ended, ``run`` keeps returning the final solution (which does
 not require further testing) and ``is_end()`` is True.
 
+Batch protocol (beyond-paper): the staged machine is now built on an
+``ask()``/``tell(costs)`` pair so a driver can evaluate a whole round of
+candidates concurrently (compile fan-out, within-round dedup):
+
+* :meth:`ask` returns the full list of candidates whose costs the optimizer
+  needs next — CSA's m coupled probes, NM's initial simplex, a grid's sweep.
+  Calling it again before :meth:`tell` returns the same batch; once the
+  optimization has ended it returns ``[]``.
+* :meth:`tell` delivers the costs, in order, for the batch `ask` returned,
+  advancing the optimizer exactly as the equivalent sequence of sequential
+  ``run`` calls would — same RNG draws, same accept decisions, same budget
+  accounting.  The protocols may be switched at round boundaries; a direct
+  ``tell`` mid-way through a drip-fed ``run`` round discards the costs
+  ``run`` had buffered (the whole round's costs must come through ``tell``).
+
+``run`` itself is implemented *on top of* ask/tell: it hands out the pending
+batch one candidate per call and buffers the incoming costs until the round
+completes.  Subclasses implement the primitives :meth:`_next_batch` /
+:meth:`_consume_batch` and inherit ``run``/``ask``/``tell``.
+
 Optimizers work in the normalized hypercube ``[-1, 1]^dim``; rescaling to the
 user domain (min/max, int/float/log/categorical) is the responsibility of
 :class:`repro.core.space.SearchSpace` inside :class:`repro.core.autotuning.Autotuning`.
@@ -24,6 +44,7 @@ user domain (min/max, int/float/log/categorical) is the responsibility of
 from __future__ import annotations
 
 import abc
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -31,20 +52,98 @@ __all__ = ["NumericalOptimizer"]
 
 
 class NumericalOptimizer(abc.ABC):
-    """Abstract staged optimizer (paper Algorithm 1)."""
+    """Abstract staged optimizer (paper Algorithm 1) with batch ask/tell."""
 
     #: normalized search bounds
     LO: float = -1.0
     HI: float = 1.0
 
+    # batch-protocol state; instance attributes shadow these class defaults
+    _pending_batch: Optional[List[np.ndarray]] = None  # asked, awaiting tell
+    _run_batch: Optional[List[np.ndarray]] = None  # being drip-fed via run()
+    _run_costs: Optional[List[float]] = None  # costs buffered by run()
+
+    # --------------------------------------------------- batch primitives
     @abc.abstractmethod
+    def _next_batch(self) -> Optional[List[np.ndarray]]:
+        """Produce the next round of candidates, or None/[] if the search is
+        over (implementations set their DONE state before returning None).
+        Called exactly once per round — RNG draws happen here."""
+
+    @abc.abstractmethod
+    def _consume_batch(self, points: List[np.ndarray], costs: List[float]) -> None:
+        """Deliver ``costs[i]`` for ``points[i]`` (the batch `_next_batch`
+        produced) and advance the round.  Costs are already sanitized
+        (non-finite → inf)."""
+
+    # --------------------------------------------------------- batch API
+    def ask(self) -> List[np.ndarray]:
+        """Candidates whose costs the optimizer needs next ([] once ended).
+
+        Idempotent: repeated calls return (copies of) the same batch until
+        :meth:`tell` delivers its costs."""
+        if self.is_end():
+            return []
+        if self._pending_batch is None:
+            batch = self._next_batch()
+            if not batch:
+                return []
+            self._pending_batch = [np.asarray(p, dtype=float).copy() for p in batch]
+        return [p.copy() for p in self._pending_batch]
+
+    def tell(self, costs: Sequence[float]) -> None:
+        """Deliver the costs for the batch returned by :meth:`ask`."""
+        if self.is_end():
+            return
+        if self._pending_batch is None:
+            raise RuntimeError("tell() before ask(): no batch is pending")
+        if len(costs) != len(self._pending_batch):
+            raise ValueError(
+                f"tell() got {len(costs)} costs for a batch of {len(self._pending_batch)}"
+            )
+        batch = self._pending_batch
+        self._pending_batch = None
+        clean = [float(c) if np.isfinite(c) else np.inf for c in costs]
+        self._consume_batch(batch, clean)
+        # a direct tell() supersedes any half-delivered run() round
+        self._run_batch = None
+        self._run_costs = None
+
+    def _clear_batch_state(self) -> None:
+        """Drop pending ask/run bookkeeping (call from reset())."""
+        self._pending_batch = None
+        self._run_batch = None
+        self._run_costs = None
+
+    # ----------------------------------------------------- sequential run
     def run(self, cost: float) -> np.ndarray:
         """Deliver ``cost`` of the last returned candidate; return the next one.
 
         Returns an array of shape ``(dimension,)`` in ``[-1, 1]``.  After
-        :meth:`is_end` becomes True, returns the final solution.
+        :meth:`is_end` becomes True, returns the final solution.  Implemented
+        over :meth:`ask`/:meth:`tell`: costs buffer until the pending round is
+        complete, then the round advances in one step.
         """
+        if self.is_end():
+            return self.best_solution
+        if self._run_batch is None:
+            self._run_batch = self.ask()  # first call: cost is ignored
+            self._run_costs = []
+            if not self._run_batch:
+                return self.best_solution
+        else:
+            self._run_costs.append(float(cost) if np.isfinite(cost) else np.inf)
+            if len(self._run_costs) == len(self._run_batch):
+                self.tell(self._run_costs)  # resets _run_batch/_run_costs
+                if self.is_end():
+                    return self.best_solution
+                self._run_batch = self.ask()
+                self._run_costs = []
+                if not self._run_batch:
+                    return self.best_solution
+        return self._run_batch[len(self._run_costs)].copy()
 
+    # ------------------------------------------------------------- interface
     @abc.abstractmethod
     def get_num_points(self) -> int:
         """Number of solutions the algorithm maintains (``num_opt`` for CSA)."""

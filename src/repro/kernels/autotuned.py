@@ -17,16 +17,42 @@ processes and CI land on the first branch.
 from __future__ import annotations
 
 import dataclasses
+import os
+import sys
 from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import CSA, Autotuning, LogIntDim, RuntimeCost, SearchSpace
+from repro.core import (
+    CSA,
+    Autotuning,
+    ExecutableCache,
+    LogIntDim,
+    RuntimeCost,
+    SearchSpace,
+    compile_fanout,
+)
 from repro.tuning import TuningDB, default_db, make_key
 
 from . import ops
 
-__all__ = ["autotuned", "tune_call", "register", "get_spec", "registered", "KernelSpec"]
+__all__ = [
+    "autotuned",
+    "tune_call",
+    "register",
+    "get_spec",
+    "registered",
+    "KernelSpec",
+    "exec_cache",
+    "classify_failure",
+]
+
+#: env var: default compile fan-out width for tune_call (0/unset → cpu count)
+ENV_TUNE_JOBS = "REPRO_TUNE_JOBS"
+
+#: env var: default for tune_call's ``drain`` (finish all compiles before the
+#: first measurement of a round instead of overlapping them)
+ENV_TUNE_DRAIN = "REPRO_TUNE_DRAIN"
 
 
 # ------------------------------------------------------------------ registry
@@ -145,6 +171,86 @@ register(
 
 
 # ------------------------------------------------------------------- tuning
+#: substrings that mark an *expected* failure: a candidate whose tile/block
+#: configuration is illegal for this shape or doesn't fit the target memory.
+#: Anything else is an unexpected error — a real bug the search must not eat.
+_ILLEGAL_MARKERS = (
+    "block",
+    "tile",
+    "grid",
+    "divisible",
+    "divides",
+    "not a multiple",
+    "memory space",
+    "vmem",
+    "smem",
+    "out of memory",
+    "resource_exhausted",
+    "resource exhausted",
+    "mosaic",
+)
+
+#: exception types that are programmer errors no matter what the message says:
+#: the knob names themselves ("block_q", "tile"...) show up in e.g. a TypeError
+#: about an unknown kwarg, which must never pass for an illegal-tile failure
+_BUG_EXC_TYPES = (TypeError, AttributeError, NameError, ImportError, SyntaxError)
+
+#: failures that may be transient (e.g. RESOURCE_EXHAUSTED purely from the
+#: memory pressure of concurrent compiles) — classified "illegal" so the
+#: search moves on quietly, but never cached as permanent: a revisit retries
+_TRANSIENT_MARKERS = ("resource_exhausted", "resource exhausted", "out of memory")
+
+
+def exec_cache() -> ExecutableCache:
+    """The process-wide executable cache used by :func:`tune_call`."""
+    return _EXEC_CACHE
+
+
+def classify_failure(exc: BaseException) -> str:
+    """``"illegal"`` (expected: bad tile for this shape/memory) or
+    ``"unexpected"`` (a real bug that deserves a log line)."""
+    if isinstance(exc, _BUG_EXC_TYPES):
+        return "unexpected"
+    msg = f"{type(exc).__name__}: {exc}".lower()
+    return "illegal" if any(m in msg for m in _ILLEGAL_MARKERS) else "unexpected"
+
+
+def _failure_is_deterministic(exc: BaseException) -> bool:
+    """Whether a build failure may be cached for the process lifetime.
+
+    Only clearly deterministic illegal-tile failures qualify; unexpected
+    errors and resource exhaustion (which can be an artifact of concurrent
+    compile load rather than the candidate itself) are retried on revisit."""
+    if classify_failure(exc) != "illegal":
+        return False
+    msg = f"{type(exc).__name__}: {exc}".lower()
+    return not any(m in msg for m in _TRANSIENT_MARKERS)
+
+
+#: process-level cache of AOT-compiled kernel executables, keyed by
+#: (context fingerprint, decoded knobs) — revisited candidates across rounds,
+#: optimizer resets, and pretune grid cells never recompile.  Only
+#: deterministic illegal-tile failures are cached; transient/unexpected
+#: build failures are retried on revisit.
+_EXEC_CACHE = ExecutableCache(
+    maxsize=int(os.environ.get("REPRO_EXEC_CACHE_SIZE", "1024")),
+    cache_failures=_failure_is_deterministic,
+)
+
+
+def _resolve_jobs(jobs: Optional[int]) -> int:
+    if jobs is None:
+        jobs = int(os.environ.get(ENV_TUNE_JOBS, "0") or 0)
+    if jobs <= 0:
+        # leave one core for the serial measurement thread; on 1-2 core hosts
+        # concurrent XLA compiles contend more than they overlap, so fall back
+        # to the serial compile path there.  Capped at 8 by default — tuning
+        # rounds rarely have more unique candidates, and wider fan-out mostly
+        # adds compile memory pressure; pass jobs=/REPRO_TUNE_JOBS to exceed it
+        jobs = min(8, max(1, (os.cpu_count() or 2) - 1))
+    return max(1, jobs)
+
+
 def tune_call(
     name: str,
     *args,
@@ -157,11 +263,33 @@ def tune_call(
     repeats: int = 2,
     verbose: bool = False,
     source: str = "online",
+    jobs: Optional[int] = None,
+    drain: Optional[bool] = None,
+    cost_fn: Optional[Callable] = None,
     **kwargs,
 ):
     """Run a measured PATSMA search for this call context and commit the
     result to ``db``.  Warm-seeds from the nearest stored neighbor when one
-    exists (half budget).  Returns the TuningRecord for the context."""
+    exists (half budget).  Returns the TuningRecord for the context.
+
+    Candidates are evaluated in batches: each optimizer round is deduplicated,
+    its unique points AOT-compiled concurrently (``jobs`` threads, default
+    ``REPRO_TUNE_JOBS`` or min(8, CPU count − 1) — XLA compilation releases
+    the GIL)
+    through the process-level executable cache, and then measured strictly
+    serially (one candidate at a time) so wall-clock timings stay honest.
+    By default measurement of early candidates overlaps the *remaining*
+    compiles, which maximizes throughput but lets background compile load
+    inflate early candidates' timings relative to late ones; ``drain=True``
+    (or ``REPRO_TUNE_DRAIN=1``) finishes every compile in the round before
+    the first measurement, trading some overlap for unbiased timings.
+    Failures are classified: expected illegal-tile candidates quietly cost
+    ``inf``, while each distinct unexpected error is logged once per search;
+    the committed record carries a ``crashed`` count either way.
+
+    ``cost_fn(executable, *args) -> float`` overrides the default
+    :class:`RuntimeCost` (used by tests/benchmarks for deterministic costs).
+    """
     import jax
 
     spec = get_spec(name)
@@ -169,17 +297,67 @@ def tune_call(
     key = make_key(name, args=args, kwargs=kwargs, space=space,
                    extra={"interpret": bool(interpret)})
     db = db if db is not None else default_db()
-    cost = RuntimeCost(warmup=warmup, repeats=repeats)
+    cost = cost_fn if cost_fn is not None else RuntimeCost(warmup=warmup, repeats=repeats)
+    jobs = _resolve_jobs(jobs)
+    if drain is None:
+        drain = bool(int(os.environ.get(ENV_TUNE_DRAIN, "0") or 0))
+    ctx = key.encode()
+    logged: set = set()  # distinct unexpected errors already reported
 
-    def measure(*knob_values):
-        knobs = dict(zip(space.names, knob_values))
-        try:
+    def build_for(knobs: dict):
+        def build():
             fn = jax.jit(
                 lambda *xs: spec.fn(*xs, **kwargs, **knobs, interpret=interpret)
             )
-            return cost(fn, *args)
-        except Exception:
-            return np.inf  # illegal tile for this shape → crashed candidate
+            return fn.lower(*args).compile()
+
+        return build
+
+    def note_failure(knobs: dict, exc: BaseException, stage: str) -> None:
+        kind = classify_failure(exc)
+        if kind == "unexpected":
+            sig = (type(exc).__name__, str(exc).splitlines()[0] if str(exc) else "")
+            if sig not in logged:
+                logged.add(sig)
+                print(
+                    f"[patsma] {name}: unexpected {stage} error for {knobs}: "
+                    f"{type(exc).__name__}: {exc}",
+                    file=sys.stderr,
+                )
+        elif verbose:
+            print(f"[patsma] {name}: illegal candidate {knobs}: {exc}")
+
+    def measure_one(p, ex):
+        if isinstance(ex, BaseException):
+            note_failure(p, ex, "compile")
+            return np.inf
+        try:
+            return float(cost(ex, *args))
+        except Exception as e:
+            note_failure(p, e, "measure")
+            return np.inf
+
+    def measure_batch(points):
+        # Concurrent AOT compile of the round's unique candidates, deduped
+        # against every executable this process ever built; wall-clock
+        # measurement stays strictly serial (one candidate at a time, in
+        # order) but overlaps the *remaining* compiles — candidate i is
+        # measured as soon as its executable is ready while i+1.. still
+        # compile on the pool.
+        items = [((ctx, tuple(sorted(p.items()))), build_for(p)) for p in points]
+        if jobs <= 1 or len(items) <= 1:
+            compiled = compile_fanout(items, cache=_EXEC_CACHE, jobs=1)
+            return [measure_one(p, ex) for p, ex in zip(points, compiled)]
+        from concurrent.futures import ThreadPoolExecutor, wait
+
+        out = []
+        with ThreadPoolExecutor(max_workers=min(jobs, len(items))) as pool:
+            futs = [pool.submit(_EXEC_CACHE.get_or_build, k, b) for k, b in items]
+            if drain:  # no compile runs in the background of any measurement
+                wait(futs)
+            for p, f in zip(points, futs):
+                out.append(measure_one(p, f.result()))
+        return out
 
     at = Autotuning(
         space=space,
@@ -191,7 +369,7 @@ def tune_call(
         key=key,
         db_source=source,
     )
-    at.entire_exec(measure)
+    at.entire_exec_batch(measure_batch)
     at.commit()  # no-op if auto-committed / exact hit
     return db.get(key)
 

@@ -5,11 +5,14 @@
         --kernel matmul --kernel flash_attention
 
 Sweeps the registered (kernel, shape) grid, runs the PATSMA search per
-context, and commits every record atomically.  The committed ``tuned/cpu.json``
-snapshot is what the test suite and CI replay: the suite's kernel dispatches
-become exact fingerprint hits, so they skip straight to the stored best with
-zero re-measurement.  On a TPU host the same command (without ``--smoke``)
-produces the production snapshot for that device kind.
+context, and commits every record atomically.  Each context's candidate
+rounds are AOT-compiled concurrently (``--jobs`` threads; measurement stays
+serial) through the process-wide executable cache, so revisited candidates
+never recompile.  The committed ``tuned/cpu.json`` snapshot is what the test
+suite and CI replay: the suite's kernel dispatches become exact fingerprint
+hits, so they skip straight to the stored best with zero re-measurement.  On
+a TPU host the same command (without ``--smoke``) produces the production
+snapshot for that device kind.
 """
 from __future__ import annotations
 
@@ -91,9 +94,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-iter", type=int, default=None, help="CSA iterations (default 2 smoke / 4)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-interpret", action="store_true", help="run kernels compiled (TPU host)")
+    ap.add_argument(
+        "--jobs", type=int, default=None,
+        help="concurrent AOT compiles per tuning round (default: REPRO_TUNE_JOBS or cpu count)",
+    )
     args = ap.parse_args(argv)
 
-    from repro.kernels.autotuned import registered, tune_call
+    from repro.kernels.autotuned import exec_cache, registered, tune_call
     from repro.tuning import TuningDB, default_device
 
     max_iter = args.max_iter if args.max_iter is not None else (2 if args.smoke else 4)
@@ -122,6 +129,7 @@ def main(argv=None) -> int:
             num_opt=args.num_opt,
             max_iter=max_iter,
             seed=args.seed,
+            jobs=args.jobs,
             source="pretune",
         )
         dt = time.perf_counter() - t0
@@ -130,15 +138,18 @@ def main(argv=None) -> int:
             print(f"  {name} {shapes}: every candidate failed; nothing stored ({dt:.1f}s)",
                   file=sys.stderr)
             continue
+        crashed = f" crashed={rec.crashed}" if rec.crashed else ""
         print(
             f"  {name} {shapes}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
-            f"evals={rec.evals} ({dt:.1f}s)"
+            f"evals={rec.evals}{crashed} ({dt:.1f}s)"
         )
         n_done += 1
     db.save()
+    cs = exec_cache().stats()
     print(
         f"pretune: {n_done} contexts tuned, {len(db)} records in {args.db} "
-        f"({time.perf_counter() - t_all:.1f}s)"
+        f"({time.perf_counter() - t_all:.1f}s); exec cache: {cs['misses']} compiles, "
+        f"{cs['hits']} hits, {cs['recompiles']} recompiles"
     )
     return 0
 

@@ -201,6 +201,7 @@ class TuningRecord:
     evals: int = 0
     source: str = "online"  # "online" | "pretune"
     created: float = dataclasses.field(default_factory=time.time)
+    crashed: int = 0  # distinct candidates that failed during the search
 
     def to_json(self) -> dict:
         return {
@@ -210,6 +211,7 @@ class TuningRecord:
             "evals": self.evals,
             "source": self.source,
             "created": self.created,
+            "crashed": self.crashed,
         }
 
     @classmethod
@@ -221,4 +223,5 @@ class TuningRecord:
             evals=int(d.get("evals", 0)),
             source=str(d.get("source", "online")),
             created=float(d.get("created", 0.0)),
+            crashed=int(d.get("crashed", 0)),
         )

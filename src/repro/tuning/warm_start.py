@@ -68,4 +68,5 @@ def record_from(autotuner, key, *, source: str = "online") -> Optional[TuningRec
         cost=float(cost),
         evals=int(autotuner.num_evals),
         source=source,
+        crashed=int(getattr(autotuner, "num_crashed", 0)),
     )

@@ -1,0 +1,539 @@
+"""Batch evaluation pipeline tests: ask/tell ⇔ run parity, batch dedup,
+the executable cache, and tune_call's concurrent compile path."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CSA,
+    Autotuning,
+    ExecutableCache,
+    GridSearch,
+    NelderMead,
+    RandomSearch,
+    compile_fanout,
+)
+
+
+# ---------------------------------------------------------------- cost fns
+def sphere(z):
+    return float(np.sum(z**2))
+
+
+def shifted_abs(z):
+    return float(np.sum(np.abs(z - 0.25)))
+
+
+def cliff(z):
+    """Half the domain 'crashes' (inf cost) — exercises the nonfinite path."""
+    return np.inf if z[0] > 0.3 else float(np.sum((z + 0.2) ** 2))
+
+
+def rastrigin(z):
+    x = z * 2.0
+    return float(10 * x.size + np.sum(x**2 - 10 * np.cos(2 * np.pi * x)))
+
+
+# ----------------------------------------------------------- parity helpers
+def drive_run(opt, fn):
+    """Sequential staging; returns the emitted candidate list."""
+    z = opt.run(np.nan)
+    pts = []
+    while not opt.is_end():
+        pts.append(z.copy())
+        z = opt.run(fn(z))
+    return pts
+
+
+def drive_ask_tell(opt, fn):
+    """Batch staging; returns the emitted candidate list (flattened)."""
+    pts = []
+    guard = 0
+    while True:
+        batch = opt.ask()
+        if not batch:
+            break
+        pts.extend(p.copy() for p in batch)
+        opt.tell([fn(z) for z in batch])
+        guard += 1
+        assert guard < 100_000
+    return pts
+
+
+def assert_same_trajectory(make_opt, fn):
+    a, b = make_opt(), make_opt()
+    pts_a = drive_run(a, fn)
+    pts_b = drive_ask_tell(b, fn)
+    assert len(pts_a) == len(pts_b)
+    assert all(np.array_equal(x, y) for x, y in zip(pts_a, pts_b))
+    assert a.best_cost == b.best_cost
+    assert np.array_equal(a.best_solution, b.best_solution)
+    assert a.is_end() and b.is_end()
+    return pts_a
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("fn", [sphere, cliff], ids=["sphere", "cliff"])
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_csa_ask_tell_matches_run(fn, seed):
+    pts = assert_same_trajectory(
+        lambda: CSA(dim=2, num_opt=3, max_iter=8, seed=seed), fn
+    )
+    assert len(pts) == 3 * 8  # paper Eq. 1 (ignore applied by the driver)
+
+
+def test_csa_ask_is_idempotent_and_batched_by_round():
+    opt = CSA(dim=2, num_opt=4, max_iter=5, seed=1)
+    b1 = opt.ask()
+    b2 = opt.ask()
+    assert len(b1) == 4  # the full INIT population in one round
+    assert all(np.array_equal(x, y) for x, y in zip(b1, b2))
+    opt.tell([sphere(z) for z in b1])
+    b3 = opt.ask()
+    assert len(b3) == 4  # m probes per CSA iteration
+    assert not all(np.array_equal(x, y) for x, y in zip(b1, b3))
+
+
+def test_tell_validates():
+    opt = CSA(dim=1, num_opt=2, max_iter=3, seed=0)
+    with pytest.raises(RuntimeError):
+        opt.tell([1.0, 2.0])  # no batch asked yet
+    batch = opt.ask()
+    with pytest.raises(ValueError):
+        opt.tell([1.0] * (len(batch) + 1))
+    opt.tell([1.0] * len(batch))  # still consumable after the failed tell
+
+
+@pytest.mark.parametrize(
+    "fn", [sphere, shifted_abs, cliff, rastrigin],
+    ids=["sphere", "abs", "cliff", "rastrigin"],
+)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_nm_ask_tell_matches_run(fn, seed):
+    assert_same_trajectory(
+        lambda: NelderMead(dim=3, error=0.0, max_iter=40, seed=seed), fn
+    )
+
+
+def test_nm_ask_tell_matches_run_error_stop():
+    assert_same_trajectory(
+        lambda: NelderMead(dim=2, error=1e-3, max_iter=0, seed=2), sphere
+    )
+
+
+def test_nm_budget_truncates_batches():
+    """max_iter smaller than the simplex: only max_iter candidates emitted."""
+    for cap in (2, 3, 5):
+        opt = NelderMead(dim=3, error=0.0, max_iter=cap, seed=0)
+        pts = drive_ask_tell(opt, sphere)
+        assert len(pts) == cap
+        assert opt.evaluations == cap
+        # sequential agrees
+        opt2 = NelderMead(dim=3, error=0.0, max_iter=cap, seed=0)
+        assert len(drive_run(opt2, sphere)) == cap
+
+
+@pytest.mark.parametrize("fn", [sphere, shifted_abs, rastrigin],
+                         ids=["sphere", "abs", "rastrigin"])
+def test_nm_speculative_same_outcome(fn):
+    """Speculative batches measure extra points but consume identical costs:
+    same best, same consumed-eval budget, same simplex trajectory."""
+    plain = NelderMead(dim=2, error=0.0, max_iter=30, seed=4)
+    spec = NelderMead(dim=2, error=0.0, max_iter=30, seed=4, speculative=True)
+    pts_plain = drive_ask_tell(plain, fn)
+    pts_spec = drive_ask_tell(spec, fn)
+    assert spec.speculative
+    assert plain.best_cost == spec.best_cost
+    assert np.array_equal(plain.best_solution, spec.best_solution)
+    assert plain.evaluations == spec.evaluations  # budget counts consumed only
+    assert len(pts_spec) >= len(pts_plain)  # extras are the overlap fuel
+    # the consumed (sequential) candidates are a subsequence of the asked ones
+    keys = {tuple(np.round(p, 12)) for p in pts_spec}
+    assert all(tuple(np.round(p, 12)) in keys for p in pts_plain)
+
+
+def test_grid_and_random_ask_tell_match_run():
+    assert_same_trajectory(lambda: GridSearch(2, points_per_dim=4), sphere)
+    assert_same_trajectory(lambda: RandomSearch(2, max_iter=17, seed=3), sphere)
+
+
+def test_grid_asks_whole_sweep():
+    opt = GridSearch(1, points_per_dim=9)
+    assert len(opt.ask()) == 9
+
+
+# -------------------------------------------------------- Autotuning driver
+def _cost1d(p):
+    return (p - 9) ** 2 * 0.25 + 1.0
+
+
+@pytest.mark.parametrize("ignore", [0, 2])
+def test_entire_exec_batch_matches_sequential(ignore):
+    a = Autotuning(1, 32, ignore=ignore, dim=1, num_opt=4, max_iter=12, seed=5,
+                   cache=True)
+    a.entire_exec(_cost1d)
+
+    b = Autotuning(1, 32, ignore=ignore, dim=1, num_opt=4, max_iter=12, seed=5,
+                   cache=True)
+    calls = []
+
+    def measure_batch(points):
+        calls.append([dict(p) for p in points])
+        return [_cost1d(p["p0"]) for p in points]
+
+    b.entire_exec_batch(measure_batch)
+
+    assert a.history == b.history
+    assert a.best_point == b.best_point
+    assert a.point == b.point
+    assert a.num_evals == b.num_evals
+    assert a.num_measurements == b.num_measurements
+    assert b.finished
+    # each batch call carried only deduplicated, not-yet-cached points
+    # (with ignore=k the same batch repeats k+1 times for stabilization)
+    seen = set()
+    prev = None
+    for batch in calls:
+        keys = [p["p0"] for p in batch]
+        assert len(keys) == len(set(keys))  # no dupes within a round
+        if keys == prev:
+            continue  # stabilization repeat of the same round
+        assert not (set(keys) & seen)  # no re-measurement across rounds
+        seen |= set(keys)
+        prev = keys
+
+
+def test_entire_exec_batch_dedups_within_round():
+    """A tiny space forces duplicate decoded points inside one CSA round —
+    they must be measured once."""
+    measured = []
+
+    def measure_batch(points):
+        measured.append(len(points))
+        return [float(p["p0"]) for p in points]
+
+    at = Autotuning(0, 1, ignore=0, dim=1, num_opt=6, max_iter=4, seed=0,
+                    cache=True)
+    at.entire_exec_batch(measure_batch)
+    assert at.finished
+    # the whole search sees only 2 decodable points: measured at most twice
+    assert sum(measured) <= 2
+    assert at.num_evals == 6 * 4  # the optimizer still got every cost
+
+
+def test_entire_exec_batch_without_cache_dedups_round_only():
+    counts = {}
+
+    def measure_batch(points):
+        for p in points:
+            counts[p["p0"]] = counts.get(p["p0"], 0) + 1
+        return [float(p["p0"] == 0) for p in points]
+
+    at = Autotuning(0, 1, ignore=0, dim=1, num_opt=5, max_iter=3, seed=1,
+                    cache=False)
+    at.entire_exec_batch(measure_batch)
+    # within a round each point once; across rounds re-measured (cache off)
+    assert max(counts.values()) <= 3  # bounded by number of rounds
+
+
+def test_entire_exec_batch_ignore_counts_measurements():
+    at = Autotuning(1, 8, ignore=2, dim=1, num_opt=3, max_iter=4, seed=0,
+                    cache=True)
+    calls = {"n": 0}
+
+    def measure_batch(points):
+        calls["n"] += 1
+        return [_cost1d(p["p0"]) for p in points]
+
+    at.entire_exec_batch(measure_batch)
+    assert at.finished
+    # stabilization rounds: each measuring round ran (ignore + 1) times
+    assert calls["n"] % 3 == 0
+
+
+def test_num_crashed_counts_distinct_inf_points():
+    def measure_batch(points):
+        return [np.inf if p["p0"] > 4 else float(p["p0"]) for p in points]
+
+    at = Autotuning(1, 8, ignore=0, dim=1, num_opt=4, max_iter=6, seed=2,
+                    cache=True)
+    at.entire_exec_batch(measure_batch)
+    visited = {p["p0"] for p, _ in at.history}
+    assert at.num_crashed == sum(1 for v in visited if v > 4)
+    assert at.best_point["p0"] <= 4
+
+
+# --------------------------------------------------------- executable cache
+def test_executable_cache_hits_and_failures():
+    cache = ExecutableCache(maxsize=8)
+    builds = {"n": 0}
+
+    def build_ok():
+        builds["n"] += 1
+        return "exe"
+
+    def build_bad():
+        raise ValueError("tile does not divide shape")
+
+    assert cache.get_or_build("a", build_ok) == "exe"
+    assert cache.get_or_build("a", build_ok) == "exe"
+    assert builds["n"] == 1
+    err = cache.get_or_build("bad", build_bad)
+    assert isinstance(err, ValueError)
+    # the failure is cached too: no rebuild on revisit
+    assert cache.get_or_build("bad", lambda: "never") is err
+    s = cache.stats()
+    assert s["hits"] == 2 and s["misses"] == 2 and s["recompiles"] == 0
+
+
+def test_executable_cache_recompile_accounting_after_eviction():
+    cache = ExecutableCache(maxsize=2)
+    for k in ("a", "b", "c"):  # evicts "a"
+        cache.get_or_build(k, lambda k=k: k)
+    assert cache.stats()["evictions"] == 1
+    cache.get_or_build("a", lambda: "a2")  # rebuilt → recompile
+    assert cache.stats()["recompiles"] == 1
+
+
+def test_executable_cache_concurrent_single_build():
+    cache = ExecutableCache()
+    builds = {"n": 0}
+    lock = threading.Lock()
+
+    def slow_build():
+        with lock:
+            builds["n"] += 1
+        time.sleep(0.05)
+        return object()
+
+    results = []
+
+    def worker():
+        results.append(cache.get_or_build("k", slow_build))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert builds["n"] == 1
+    assert all(r is results[0] for r in results)
+    assert cache.stats()["hits"] == 7
+
+
+def test_executable_cache_failure_predicate_skips_transient():
+    calls = {"n": 0}
+
+    def build_transient():
+        calls["n"] += 1
+        raise RuntimeError("RESOURCE_EXHAUSTED: compile ran out of memory")
+
+    cache = ExecutableCache(
+        maxsize=8,
+        cache_failures=lambda e: "resource_exhausted" not in str(e).lower(),
+    )
+    err = cache.get_or_build("t", build_transient)
+    assert isinstance(err, RuntimeError)
+    err2 = cache.get_or_build("t", build_transient)  # retried, not replayed
+    assert isinstance(err2, RuntimeError) and err2 is not err
+    assert calls["n"] == 2
+    # an intentional retry is a plain miss, not a recompile
+    assert cache.stats()["recompiles"] == 0
+
+    def build_deterministic():
+        raise ValueError("tile does not divide shape")
+
+    det = cache.get_or_build("d", build_deterministic)
+    assert cache.get_or_build("d", lambda: "never") is det  # cached
+
+
+def test_executable_cache_base_exception_not_cached():
+    """A KeyboardInterrupt mid-compile must not poison the key."""
+    cache = ExecutableCache(maxsize=8)
+
+    def interrupt():
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        cache.get_or_build("k", interrupt)
+    assert cache.get_or_build("k", lambda: "exe") == "exe"  # rebuilt
+    assert cache.stats()["recompiles"] == 0
+
+
+def test_partial_round_best_visible_to_driver():
+    """The run() adapter buffers costs until a full ask/tell round completes;
+    a driver that stops mid-round (a short serving stream) must still see the
+    best of the costs it already delivered."""
+    at = Autotuning(1, 8, ignore=0, dim=1, num_opt=4, max_iter=8, seed=0)
+    first = at.point
+    at.exec(1.25)  # one cost into a 4-probe CSA round
+    assert at.best_cost == 1.25
+    assert at.best_point == first
+
+
+def test_compile_fanout_preserves_order():
+    cache = ExecutableCache()
+    items = [(i, lambda i=i: i * 10) for i in range(20)]
+    out = compile_fanout(items, cache=cache, jobs=4)
+    assert out == [i * 10 for i in range(20)]
+    # duplicate keys share one build
+    out2 = compile_fanout([(0, lambda: "other")], cache=cache, jobs=2)
+    assert out2 == [0]
+
+
+# ------------------------------------------------- tune_call (kernels layer)
+@pytest.fixture
+def probe_kernel():
+    """A registered kernel whose output deterministically encodes its knobs
+    (so costs are noise-free) with optional failure modes."""
+    import jax.numpy as jnp
+
+    from repro.core import ChoiceDim, SearchSpace
+    from repro.kernels.autotuned import _REGISTRY, KernelSpec, register
+
+    def fn(x, *, mode, interpret=False):
+        if mode == 91:
+            raise ValueError("tile 91 does not evenly divide shape")  # expected
+        if mode in (92, 93):
+            raise RuntimeError("boom: unexpected bug")  # unexpected
+        return x.sum() * 0.0 + (1.0 + mode)
+
+    name = "_batch_eval_probe"
+    register(
+        KernelSpec(
+            name=name,
+            fn=fn,
+            space=lambda x: SearchSpace([ChoiceDim("mode", (0, 1, 2, 91, 92, 93))]),
+            defaults=lambda x: {"mode": 0},
+        )
+    )
+    yield name
+    _REGISTRY.pop(name, None)
+
+
+def det_cost(ex, *args):
+    return float(np.asarray(ex(*args)))
+
+
+def test_tune_call_batched_matches_sequential_record(probe_kernel):
+    """Concurrency smoke: jobs=4 and jobs=1 commit the same DB record as the
+    sequential reference driver for a deterministic cost."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import CSA, RuntimeCost  # noqa: F401
+    from repro.kernels.autotuned import exec_cache, get_spec, tune_call
+    from repro.tuning import TuningDB, make_key
+
+    x = jnp.ones((4, 4))
+
+    # sequential reference: per-candidate jit dispatch through entire_exec
+    spec = get_spec(probe_kernel)
+    space = spec.space(x)
+    key = make_key(probe_kernel, args=(x,), space=space, extra={"interpret": True})
+    db_s = TuningDB(None)
+
+    def measure(*knob_values):
+        knobs = dict(zip(space.names, knob_values))
+        try:
+            fn = jax.jit(lambda *xs: spec.fn(*xs, **knobs, interpret=True))
+            return det_cost(fn, x)
+        except Exception:
+            return np.inf
+
+    at = Autotuning(space=space, ignore=0,
+                    optimizer=CSA(1, num_opt=4, max_iter=4, seed=0),
+                    cache=True, db=db_s, key=key)
+    at.entire_exec(measure)
+    at.commit()
+    rec_s = db_s.get(key)
+
+    exec_cache().clear()
+    recs = {}
+    for jobs in (1, 4):
+        db = TuningDB(None)
+        recs[jobs] = tune_call(probe_kernel, x, db=db, interpret=True,
+                               num_opt=4, max_iter=4, seed=0, jobs=jobs,
+                               cost_fn=det_cost)
+    assert rec_s is not None
+    for jobs, rec in recs.items():
+        assert rec is not None, f"jobs={jobs}"
+        assert rec.point == rec_s.point
+        assert rec.cost == rec_s.cost
+        assert rec.evals == rec_s.evals
+    assert recs[1].crashed == recs[4].crashed == rec_s.crashed
+
+
+def test_tune_call_classifies_and_logs_failures_once(probe_kernel, capsys):
+    import jax.numpy as jnp
+
+    from repro.kernels.autotuned import exec_cache, tune_call
+    from repro.tuning import TuningDB
+
+    exec_cache().clear()
+    x = jnp.ones((4, 4))
+    # wide search: visits every mode incl. both crash flavors
+    rec = tune_call(probe_kernel, x, db=TuningDB(None), interpret=True,
+                    num_opt=6, max_iter=6, seed=0, jobs=2, cost_fn=det_cost)
+    err = capsys.readouterr().err
+    assert rec is not None
+    assert rec.point == {"mode": 0}  # lowest deterministic cost
+    # the unexpected error is logged exactly once per search (modes 92 and 93
+    # share one signature), the expected illegal-tile failure not at all
+    assert err.count("boom: unexpected bug") <= 1
+    assert "does not evenly divide" not in err
+    assert rec.crashed >= 1
+
+
+def test_classify_failure_programmer_errors_never_illegal():
+    """Knob names ('block_q', 'tile'...) appear in TypeError messages about
+    bad signatures — those are real bugs, not illegal-tile candidates."""
+    from repro.kernels.autotuned import _failure_is_deterministic, classify_failure
+
+    bad_kwarg = TypeError("got an unexpected keyword argument 'block_q'")
+    assert classify_failure(bad_kwarg) == "unexpected"
+    assert classify_failure(AttributeError("module has no attribute 'tile'")) == "unexpected"
+    illegal = ValueError("block size does not evenly divide the shape")
+    assert classify_failure(illegal) == "illegal"
+    # deterministic illegal failures cache; resource exhaustion does not
+    assert _failure_is_deterministic(illegal)
+    assert not _failure_is_deterministic(RuntimeError("RESOURCE_EXHAUSTED: oom"))
+    assert not _failure_is_deterministic(bad_kwarg)
+
+
+def test_tuning_record_crashed_roundtrip():
+    from repro.tuning import TuningDB, make_key
+    from repro.tuning.records import TuningRecord
+
+    key = make_key("k", extra={"x": 1})
+    rec = TuningRecord(key=key, point={"a": 1}, cost=0.5, evals=3, crashed=2)
+    back = TuningRecord.from_json(rec.to_json())
+    assert back.crashed == 2
+    # old records (no field) default to 0
+    blob = rec.to_json()
+    del blob["crashed"]
+    assert TuningRecord.from_json(blob).crashed == 0
+
+
+def test_exec_cache_zero_recompiles_across_searches(probe_kernel):
+    """Re-tuning the same context (fresh DB) revisits candidates: every
+    executable must come from the cache, zero recompiles."""
+    import jax.numpy as jnp
+
+    from repro.kernels.autotuned import exec_cache, tune_call
+    from repro.tuning import TuningDB
+
+    cache = exec_cache()
+    cache.clear()
+    x = jnp.ones((4, 4))
+    tune_call(probe_kernel, x, db=TuningDB(None), interpret=True,
+              num_opt=4, max_iter=3, seed=0, jobs=2, cost_fn=det_cost)
+    first = cache.stats()
+    tune_call(probe_kernel, x, db=TuningDB(None), interpret=True,
+              num_opt=4, max_iter=3, seed=0, jobs=2, cost_fn=det_cost)
+    second = cache.stats()
+    assert second["recompiles"] == first["recompiles"] == 0
+    assert second["misses"] == first["misses"]  # nothing new compiled
+    assert second["hits"] > first["hits"]

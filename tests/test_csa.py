@@ -113,6 +113,54 @@ def test_property_candidates_in_bounds(dim, m, it, seed):
 
 
 @settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_coupled_acceptance_matches_reference_loop(seed):
+    """Regression pin for the vectorized coupled-acceptance step: identical
+    accept/reject decisions (and RNG stream) to the per-solver reference loop
+    for a fixed seed, including crashed (inf) probes."""
+    m, dim = 5, 2
+    opt = CSA(dim=dim, num_opt=m, max_iter=10, seed=seed)
+    cost_rng = np.random.default_rng(seed + 1)
+
+    def costs_for(batch):
+        c = cost_rng.uniform(0.1, 2.0, size=len(batch))
+        if cost_rng.uniform() < 0.4:
+            c[int(cost_rng.integers(len(batch)))] = np.inf  # crashed candidate
+        return list(c)
+
+    opt.tell(costs_for(opt.ask()))  # INIT round
+    for _ in range(4):
+        batch = opt.ask()
+        if not batch:
+            break
+        costs = costs_for(batch)
+        # snapshot pre-acceptance state + RNG position
+        x, e = opt._x.copy(), opt._e.copy()
+        probes = opt._probes.copy()
+        probe_e = np.array([c if np.isfinite(c) else np.inf for c in costs])
+        tac = opt._tac
+        rng_state = opt._rng.bit_generator.state
+
+        opt.tell(costs)
+
+        # reference: the historical per-solver loop with short-circuit draws
+        ref = np.random.default_rng(0)
+        ref.bit_generator.state = rng_state
+        emax = float(np.max(e[np.isfinite(e)])) if np.any(np.isfinite(e)) else 0.0
+        ex = np.exp((np.where(np.isfinite(e), e, emax) - emax) / max(tac, 1e-300))
+        probs = ex / float(np.sum(ex))
+        for i in range(m):
+            if not np.isfinite(probe_e[i]):
+                continue
+            if probe_e[i] < e[i] or ref.uniform() < probs[i]:
+                x[i] = probes[i]
+                e[i] = probe_e[i]
+        assert np.array_equal(opt._x, x)
+        assert np.array_equal(opt._e, e)
+        assert opt._rng.bit_generator.state["state"] == ref.bit_generator.state["state"]
+
+
+@settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_property_deterministic_given_seed(seed):
     def run_once():
