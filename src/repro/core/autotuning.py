@@ -205,22 +205,52 @@ class Autotuning:
     def history(self) -> list:
         return list(self._history)
 
-    def reset(self, level: int = 0) -> None:
+    def reset(
+        self,
+        level: int = 0,
+        *,
+        warm_point: Optional[dict] = None,
+        budget_frac: Optional[float] = None,
+        spread: float = 0.2,
+    ) -> None:
         """Re-enter tuning (e.g. when the watchdog detects environment drift).
 
         Forwards to the optimizer's reset (paper §2.2) and clears the cost
         cache: a drift reset means the old measurements no longer describe
         the environment, and a kept cache would answer every revisited
         candidate instantly — finishing the "re-tune" with zero fresh
-        measurements and committing pre-drift data to the DB."""
+        measurements and committing pre-drift data to the DB.  At
+        ``level >= 1`` the measurement history is dropped for the same
+        reason (level 0 retains found solutions per the paper, so their
+        record stays).
+
+        ``warm_point`` turns the reset into a *warm re-search*: the
+        optimizer is re-seeded around the given decoded point (normally the
+        pre-drift best, which is already deployed) and, with ``budget_frac``,
+        its budget is shrunk — the online-tuning analogue of the DB
+        near-miss warm start."""
         self.optimizer.reset(level)
         self._cost_cache.clear()
+        if level >= 1:
+            self._history.clear()
         # a reset means the environment drifted: re-enter real tuning even if
         # this run was answered from the DB, and allow a fresh commit
         self._db_hit = None
         self._committed = False
         self._t0 = None
         self._ignore_left = self.ignore
+        if warm_point is not None:
+            from repro.tuning.warm_start import effective_spread
+
+            try:
+                z0 = self.space.encode(warm_point)
+            except Exception:
+                z0 = None  # incompatible point (renamed dims): cold restart
+            if z0 is not None and self.optimizer.seed(
+                z0, spread=effective_spread(self.space, spread)
+            ):
+                if budget_frac is not None and budget_frac < 1.0:
+                    self.optimizer.shrink_budget(budget_frac)
         self._z = self.optimizer.run(np.nan)
         self._point = self.space.decode(self._z)
         self._advance_through_cache()
@@ -253,6 +283,37 @@ class Autotuning:
             self._feed(float(cost))
         return self.point
 
+    def skip(self, cost: float = np.inf) -> dict:
+        """Reject the current candidate outright and advance to the next one.
+
+        Unlike :meth:`exec`, the cost is delivered immediately — ``ignore``
+        stabilization is bypassed, because no target iteration actually ran.
+        Used by the online tuner when a candidate's executable fails to
+        build: the candidate is charged ``inf`` without spending a serving
+        request on it.  The charge is *not* written to the cost cache — a
+        failure may be transient (compile resource pressure), so a revisited
+        candidate must be offered for a fresh build attempt rather than have
+        the cached ``inf`` replayed for the rest of the search."""
+        if not self.finished:
+            self._deliver(float(cost), cacheable=False)
+        return self.point
+
+    def note(self, point: dict, cost: float) -> None:
+        """Record an out-of-band measurement into this run's history.
+
+        The optimizer is *not* fed — this is for costs observed outside the
+        search itself, e.g. the live serving cost of the currently deployed
+        point right after a drift reset.  It gives :attr:`best_point` /
+        :meth:`commit` an honest, current-environment view of points the
+        (re-)search has not visited yet: a warm re-search that fails to beat
+        the incumbent still commits the incumbent at its *fresh* cost."""
+        missing = [n for n in self.space.names if n not in point]
+        if missing:
+            raise ValueError(f"note(): point is missing dims {missing}")
+        self._history.append(
+            ({n: point[n] for n in self.space.names}, float(cost))
+        )
+
     # --------------------------------------------------------- cost plumbing
     def _feed(self, cost: float) -> None:
         self._measurements += 1
@@ -276,20 +337,49 @@ class Autotuning:
             self.commit()
         self._advance_through_cache()
 
-    def commit(self, *, source: Optional[str] = None) -> None:
+    def _visited(self, point: dict) -> bool:
+        """Whether ``point`` was measured (or noted) during this run."""
+        try:
+            k = self.space.key({n: point[n] for n in self.space.names})
+        except Exception:
+            return False
+        return any(self.space.key(p) == k for p, _ in self._history)
+
+    def commit(self, *, source: Optional[str] = None, force: bool = False) -> bool:
         """Persist the current best into the attached tuning DB (idempotent;
         called automatically when the optimizer finishes).  ``source``
-        defaults to the constructor's ``db_source`` provenance label."""
+        defaults to the constructor's ``db_source`` provenance label.
+
+        Clobber guard: if the DB already holds a *better* record for this
+        key whose point this run never re-measured (so nothing says it
+        stopped being good — e.g. a drifted, worse re-search that wandered
+        elsewhere), the stored record is kept.  A run that did re-measure
+        the stored point always wins — its best already accounts for that
+        point under current conditions, so committing it is a refresh, not a
+        clobber.  ``force=True`` bypasses the guard.  Returns True iff a
+        record was written."""
         if self.db is None or self.key is None or self._committed:
-            return
+            return False
         if self._db_hit is not None:
-            return  # answered from the DB; nothing new to write back
+            return False  # answered from the DB; nothing new to write back
         from repro.tuning.warm_start import record_from
 
         rec = record_from(self, self.key, source=source or self._db_source)
-        if rec is not None:
-            self.db.put(rec)
-            self._committed = True
+        if rec is None:
+            return False
+        if not force:
+            existing = self.db.get(self.key)
+            if (
+                existing is not None
+                and np.isfinite(existing.cost)
+                and existing.cost < rec.cost  # ties: fresher data wins
+                and not self._visited(existing.point)
+            ):
+                self._committed = True  # nothing better to say for this run
+                return False
+        self.db.put(rec)
+        self._committed = True
+        return True
 
     def _advance_through_cache(self) -> None:
         """If caching is on, answer revisited candidates from the cache."""

@@ -187,6 +187,18 @@ class ExecutableCache:
             fut.set_result(result)
         return fut.result()
 
+    def peek(self, key: Hashable, default: Any = None) -> Any:
+        """Non-building, non-blocking lookup: the cached value (executable or
+        cached exception object) if the build for ``key`` has *completed*,
+        else ``default``.  Does not count toward hit/miss stats and does not
+        touch LRU order — this is the serving hot path's "is it ready yet?"
+        probe, which must never trigger or wait on a compile."""
+        with self._lock:
+            fut = self._entries.get(key)
+        if fut is not None and fut.done():
+            return fut.result()
+        return default
+
     def stats(self) -> dict:
         with self._lock:
             return {

@@ -151,19 +151,33 @@ class CSA(NumericalOptimizer):
         return True
 
     def reset(self, level: int = 0) -> None:
-        """level 0: re-anneal keeping all current solutions;
-        level 1: keep only the best solution, randomize the rest;
-        level >= 2: complete reset (paper §2.2: 'a complete reset')."""
+        """level 0: re-anneal keeping all current solutions (and their
+        energies — found solutions are retained, paper §2.2);
+        level 1: keep only the best solution's *coordinates* as solver 0,
+        randomize the rest, and forget all stored energies — the point
+        survives but must re-prove itself in the new environment (this is
+        the drift-reset level: stale pre-drift costs must not outbid fresh
+        measurements);
+        level >= 2: complete reset (paper §2.2: 'a complete reset').
+
+        Every level restores the cold generation temperature and iteration
+        budget: a reset starts a new annealing episode, so a budget shrunk
+        by an earlier warm start does not compound across resets (the caller
+        re-applies ``seed()``/``shrink_budget()`` if the new episode should
+        be warm too)."""
         if level >= 2:
             self._rng = np.random.default_rng(self._seed)
             self._tgen0 = self._cold_tgen0
             self._max_iter = self._cold_max_iter
             self._full_init()
             return
+        self._tgen0 = self._cold_tgen0
+        self._max_iter = self._cold_max_iter
         if level == 1:
             keep = self._best_x.copy()
             self._x = self._rng.uniform(self.LO, self.HI, size=(self._m, self._dim))
             self._x[0] = keep
+            self._best_e = np.inf  # coordinates kept, stale energy dropped
         # level 0 and 1 share: restart the annealing schedule + re-evaluate
         self._e = np.full(self._m, np.inf)
         self._tgen = self._tgen0

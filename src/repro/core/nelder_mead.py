@@ -155,7 +155,9 @@ class NelderMead(NumericalOptimizer):
 
     def reset(self, level: int = 0) -> None:
         """level 0: rebuild the simplex around the best-known solution;
-        level >= 1: complete reset from a fresh random simplex."""
+        level >= 1: complete reset from a fresh random simplex.  Both levels
+        restore the cold evaluation budget — a reset starts a new search
+        episode, so a warm-start-shrunk budget does not compound."""
         if level >= 1:
             self._rng = np.random.default_rng(self._seed)
             self._max_evals = self._cold_max_evals
@@ -163,6 +165,7 @@ class NelderMead(NumericalOptimizer):
             return
         best_x, best_e = self._best_x.copy(), self._best_e
         self._full_init()
+        self._max_evals = self._cold_max_evals
         self._simplex[0] = best_x
         self._best_x = best_x
         self._best_e = best_e  # level 0 retains the solutions found (§2.2)

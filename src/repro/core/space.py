@@ -162,3 +162,25 @@ class SearchSpace:
         if isinstance(values, dict):
             return tuple(values[d.name] for d in self.dims)
         return tuple(values)
+
+    def resolution(self) -> float:
+        """Coarsest normalized grid step across dims (0.0 if all continuous).
+
+        The distance in ``[-1, 1]`` between adjacent representable values of
+        the coarsest discrete dimension — what a warm-start spread must
+        exceed for a seeded population to straddle neighboring grid points
+        instead of collapsing onto the seed (a ``LogIntDim`` with 6 octaves
+        has steps of 1/3; a 4-way ``ChoiceDim`` has steps of 2/3)."""
+        step = 0.0
+        for d in self.dims:
+            if isinstance(d, LogIntDim):
+                n = d._steps
+            elif isinstance(d, ChoiceDim):
+                n = len(d.values) - 1
+            elif isinstance(d, IntDim):
+                n = d.hi - d.lo
+            else:  # FloatDim and friends: continuous
+                continue
+            if n > 0:
+                step = max(step, 2.0 / n)
+        return step

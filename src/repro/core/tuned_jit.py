@@ -20,12 +20,22 @@ the second is the measured steady-state — exactly the paper's stabilization
 semantics.  Compiled executables are memoized per candidate so a revisited
 candidate never recompiles (beyond-paper; harmless to faithfulness because
 compile time is already excluded via ``ignore``).
+
+**Adaptive runtime mode** (``runtime="adaptive"``): the step stays tuned for
+the *lifetime* of the loop.  Calls route through a
+:class:`repro.runtime.online.OnlineTuner` — while the search is live an
+ε-fraction of steps measures a candidate (``epsilon=1.0`` by default, i.e.
+the classic Single-Iteration behaviour); once converged, step times stream
+into a :class:`repro.runtime.drift.DriftDetector`, and sustained
+degradation triggers ``reset(level)`` plus a half-budget warm re-search
+automatically — no external watchdog wiring needed.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional
 
-from .autotuning import Autotuning
+from .autotuning import Autotuning, _block
 from .optimizer import NumericalOptimizer
 from .space import SearchSpace
 
@@ -51,6 +61,10 @@ class TunedStep:
         name: Optional[str] = None,
         key_extra: Optional[dict] = None,
         warm_start: bool = True,
+        runtime: Optional[str] = None,
+        epsilon: float = 1.0,
+        drift=None,
+        warm_frac: float = 0.5,
     ) -> None:
         if db is not None and key is None and name is not None:
             # fingerprint a step by its name + knob space + caller context
@@ -73,6 +87,23 @@ class TunedStep:
         )
         self._steps: dict = {}  # knobs key -> compiled step  (executable cache)
         self._on_candidate = on_candidate
+        self._online = None
+        if runtime is not None:
+            if runtime != "adaptive":
+                raise ValueError(f"unknown runtime mode {runtime!r} (use 'adaptive')")
+            # late import: repro.runtime depends on repro.core
+            from repro.runtime.drift import DriftDetector
+            from repro.runtime.online import OnlineTuner
+
+            if not isinstance(drift, DriftDetector):
+                drift = DriftDetector(**(drift or {}))
+            self._online = OnlineTuner(
+                self.at,
+                epsilon=epsilon,
+                drift=drift,
+                warm_frac=warm_frac,
+                name=name or "tuned_step",
+            )
 
     # ------------------------------------------------------------------ api
     @property
@@ -98,14 +129,40 @@ class TunedStep:
             self._steps[key] = step
         return step
 
+    @property
+    def online(self):
+        """The adaptive-mode :class:`OnlineTuner` (None in classic mode)."""
+        return self._online
+
+    @property
+    def drift_events(self) -> list:
+        return list(self._online.events) if self._online is not None else []
+
     def __call__(self, *args, **kwargs):
         """Single Iteration mode: run one (possibly tuning) step."""
+        if self._online is not None:
+            return self._adaptive_call(args, kwargs)
         knobs = self.at.start()
         if self._on_candidate is not None:
             self._on_candidate(knobs)
         step = self._step_for(knobs)
         out = step(*args, **kwargs)
         self.at.end(out)  # blocks on out; no-op once finished
+        return out
+
+    def _adaptive_call(self, args: tuple, kwargs: dict):
+        """Adaptive runtime mode: explore/exploit via the online tuner, with
+        drift-triggered warm re-searches.  ``ignore`` still absorbs a fresh
+        candidate's compile: explore costs flow through ``Autotuning.exec``."""
+        decision = self._online.begin()
+        knobs = dict(decision.point)
+        if self._on_candidate is not None:
+            self._on_candidate(knobs)
+        step = self._step_for(knobs)
+        t0 = time.perf_counter()
+        out = step(*args, **kwargs)
+        _block(out)
+        self._online.observe(decision, time.perf_counter() - t0)
         return out
 
     def tune(self, *replica_args, **replica_kwargs) -> dict:

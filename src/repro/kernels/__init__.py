@@ -2,9 +2,12 @@
 
 Tunable block shapes are first-class PATSMA targets; validated on CPU with
 interpret=True against ref.py in tests/test_kernels.py.  ``autotuned`` is the
-tuning-DB-backed dispatch layer (stored best block shapes per call context).
+tuning-DB-backed dispatch layer (stored best block shapes per call context);
+``routed`` is its adaptive sibling — calls flow through the process-wide
+``ContextRouter`` so knobs keep improving online and drifted contexts
+re-tune themselves in the background.
 """
 from . import ops, ref
-from .autotuned import autotuned, tune_call
+from .autotuned import autotuned, kernel_router, routed, tune_call
 
-__all__ = ["ops", "ref", "autotuned", "tune_call"]
+__all__ = ["ops", "ref", "autotuned", "routed", "kernel_router", "tune_call"]

@@ -13,6 +13,11 @@ block shapes without owning a tuning loop: it fingerprints the call context
 
 The ``pretune`` CLI sweeps the registered grid below offline so production
 processes and CI land on the first branch.
+
+:func:`routed` is the *adaptive* dispatch on top: calls go through the
+process-wide ``repro.runtime.ContextRouter`` (:func:`kernel_router`), which
+keeps an ε-fraction of live traffic exploring candidates compiled off-thread
+and re-tunes a context in the background when its costs drift.
 """
 from __future__ import annotations
 
@@ -38,6 +43,8 @@ from . import ops
 
 __all__ = [
     "autotuned",
+    "routed",
+    "kernel_router",
     "tune_call",
     "register",
     "get_spec",
@@ -372,6 +379,112 @@ def tune_call(
     at.entire_exec_batch(measure_batch)
     at.commit()  # no-op if auto-committed / exact hit
     return db.get(key)
+
+
+# --------------------------------------------------- router-backed dispatch
+_ROUTERS: dict = {}  # interpret flag -> process-wide ContextRouter
+_ROUTER_EPSILON = 0.1
+
+
+def _router_build(spec: KernelSpec, interpret: bool) -> Callable:
+    """AOT-compile one candidate; runs on the router's background pool."""
+
+    def build(point: dict, *args, **kwargs):
+        import jax
+
+        fn = jax.jit(lambda *xs: spec.fn(*xs, **kwargs, **point, interpret=interpret))
+        return fn.lower(*args).compile()
+
+    return build
+
+
+def kernel_router(
+    *,
+    interpret: bool = False,
+    db: Optional[TuningDB] = None,
+    epsilon: float = _ROUTER_EPSILON,
+    jobs: Optional[int] = None,
+    fresh: bool = False,
+):
+    """The process-wide :class:`repro.runtime.ContextRouter` over every
+    registered kernel (one router per ``interpret`` flavour).
+
+    Contexts are (kernel × pow2 shape-bucket); each starts from the tuning
+    DB (exact pretuned fingerprints replay instantly, neighbors warm-start a
+    half-budget search) and keeps adapting online: an ``epsilon`` fraction
+    of live calls measures a candidate whose executable was AOT-compiled on
+    the background pool through the shared process executable cache, and
+    drift in the exploit costs triggers a warm re-search.  ``fresh=True``
+    builds an independently configured router (tests, custom db/epsilon)
+    instead of the cached singleton; asking the existing singleton for a
+    different configuration is an error, not a silent no-op.
+    """
+    from repro.runtime.context import ContextRouter
+
+    flag = bool(interpret)
+    if not fresh and flag in _ROUTERS:
+        if db is not None or epsilon != _ROUTER_EPSILON or jobs is not None:
+            raise ValueError(
+                f"kernel_router(interpret={flag}) is already configured; "
+                "pass fresh=True for a differently-configured router"
+            )
+        return _ROUTERS[flag]
+    router = ContextRouter(
+        db=db if db is not None else default_db(),
+        cache=_EXEC_CACHE,
+        jobs=_resolve_jobs(jobs),
+    )
+    for name in registered():
+        spec = get_spec(name)
+        router.register(
+            name,
+            space=spec.space,
+            defaults=spec.defaults,
+            build=_router_build(spec, flag),
+            epsilon=epsilon,
+            extra={"interpret": flag},
+        )
+    if not fresh:
+        _ROUTERS[flag] = router
+    return router
+
+
+def routed(
+    name: str,
+    *args,
+    router=None,
+    interpret: bool = False,
+    **kwargs,
+):
+    """Adaptive kernel dispatch: like :func:`autotuned`, but every call flows
+    through the kernel router — knobs keep improving while the process
+    serves, and a drifted context re-tunes itself in the background.
+
+    The serving call never compiles a *candidate* in-band: exploration only
+    happens once the candidate's executable is ready in the process cache.
+    The fallback path (no executable yet for the exploit knobs — e.g. the
+    very first call of a cold context) dispatches the kernel directly.
+    """
+    import time as _time
+
+    import jax
+
+    r = router if router is not None else kernel_router(interpret=interpret)
+    decision = r.begin(name, *args, **kwargs)
+    t0 = _time.perf_counter()
+    if decision.executable is not None:
+        out = decision.executable(*args)
+    else:
+        # fallback dispatch: the router already clamped the knobs from the
+        # shape-bucket's space into this exact shape's space
+        spec = get_spec(name)
+        out = spec.fn(*args, **kwargs, **decision.point, interpret=interpret)
+    try:
+        out = jax.block_until_ready(out)
+    except Exception:
+        pass
+    r.observe(decision, _time.perf_counter() - t0)
+    return out
 
 
 def autotuned(

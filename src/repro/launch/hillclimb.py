@@ -14,6 +14,12 @@ its cost = the dominant roofline term of the freshly lowered cell (delta
 method).  Every evaluation is logged to JSONL so EXPERIMENTS.md §Perf can
 show the hypothesis -> change -> before/after trail.
 
+The search loop itself lives in ``repro.runtime``: this launcher is glue
+that builds an :class:`~repro.runtime.OnlineTuner` (with a
+:class:`~repro.runtime.DriftDetector`, so a long-lived caller could keep
+feeding it post-search costs and get automatic re-searches) and drives it
+to completion with the analytic cost function.
+
     PYTHONPATH=src python -m repro.launch.hillclimb --arch llama3_405b \
         --shape train_4k --budget 10 --out results/hc_405b.jsonl
 """
@@ -23,6 +29,7 @@ import time
 
 from repro.core import CSA, Autotuning, ChoiceDim, SearchSpace
 from repro.launch.dryrun import run_cell
+from repro.runtime import DriftDetector, OnlineTuner
 
 # knob menus per shape kind
 TRAIN_KNOBS = [
@@ -123,6 +130,7 @@ def main():
         optimizer=CSA(len(space), num_opt=args.num_opt, max_iter=max_iter, seed=0),
         cache=True, verbose=True,
     )
+    tuner = OnlineTuner(at, epsilon=1.0, drift=DriftDetector(window=4, min_samples=3))
 
     log = []
 
@@ -133,8 +141,9 @@ def main():
                 f.write(json.dumps(rec) + "\n")
 
     n = 0
-    while not at.finished:
-        knobs = at.point
+
+    def cost_fn(knobs):
+        nonlocal n
         t0 = time.time()
         cost, result = evaluate(args.arch, args.shape, knobs,
                                 multi_pod=args.multi_pod, objective=args.objective)
@@ -147,7 +156,9 @@ def main():
         }
         record(rec)
         print(f"[hc] eval {n}: {knobs} -> {cost*1e3:.1f} ms ({rec['elapsed_s']}s)")
-        at.exec(cost)
+        return cost
+
+    tuner.drive(cost_fn)
 
     print(f"\n[hc] best: {at.best_point} -> {at.best_cost*1e3:.1f} ms "
           f"({at.num_evals} evals, cache hits included)")

@@ -4,23 +4,48 @@ PATSMA-tuned decode fusion depth.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --tiny \
         --batch 8 --prompt-len 32 --gen 64 --db tuned/serve.json
 
-All candidate decode-``k`` variants are AOT-compiled concurrently before the
-first token (XLA compilation releases the GIL), so online tuning never stalls
-the token stream on a compile.  With ``--db`` the tuned fusion depth persists
-across launches: the second process with the same (arch, batch) context skips
-tuning entirely and decodes at the stored-best ``k`` from the first token.
+Decode is routed through a :class:`repro.runtime.ContextRouter`: each
+(arch × batch size) is its own tuning context keyed by ``TuningKey``
+fingerprint, an ε-fraction of decode chunks explores a candidate fusion
+depth ``k``, and the rest exploit the best known.  Candidate variants are
+AOT-compiled on a background pool (and every candidate is prewarmed before
+the first token), so the token stream never stalls on XLA.  A
+``DriftDetector`` watches the per-token exploit costs and re-tunes the
+context mid-stream — at half budget, seeded at the deployed ``k`` — when
+they degrade.
+
+With ``--db`` the tuned fusion depth persists across launches: the second
+process with the same (arch, batch) context skips tuning entirely and
+decodes at the stored-best ``k`` from the first token.  ``--no-tune --db``
+replays that stored best statically (no exploration, no drift handling);
+``--no-tune`` without a DB record falls back to ``k=1``.
 """
 import argparse
 import time
-from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import Autotuning, CSA, ChoiceDim, SearchSpace
+from repro.core import ChoiceDim, SearchSpace
 from repro.models import ExecConfig, Model
+from repro.runtime import ContextRouter
 from repro.tuning import TuningDB, make_key
+
+#: candidate decode fusion depths (tokens emitted per dispatched scan)
+DECODE_KS = (1, 2, 4, 8)
+
+
+def replay_decode_k(db, key, *, gen: int, default: int = 1) -> int:
+    """Stored-best decode ``k`` for a context, for static (``--no-tune``)
+    serving: an exact DB hit replays its point, otherwise ``default``.
+    Clamped to the stream length."""
+    k = default
+    if db is not None and key is not None:
+        rec = db.get(key)
+        if rec is not None and "k" in rec.point:
+            k = int(rec.point["k"])
+    return max(1, min(k, gen))
 
 
 def main():
@@ -33,6 +58,8 @@ def main():
     ap.add_argument("--no-tune", action="store_true")
     ap.add_argument("--db", type=str, default=None,
                     help="tuning DB path; persists the tuned decode k across runs")
+    ap.add_argument("--epsilon", type=float, default=0.25,
+                    help="explored fraction of decode chunks while tuning")
     args = ap.parse_args()
 
     cfg = configs.get_tiny(args.arch) if args.tiny else configs.get(args.arch)
@@ -69,56 +96,101 @@ def main():
             return token, states, pos, toks
         return run
 
-    space = SearchSpace([ChoiceDim("k", (1, 2, 4, 8))])
+    # only depths that fit the stream are candidates: a k > --gen chunk can
+    # never run whole, so it could never be measured and the search would
+    # stall on it (short streams get their own space hash, hence their own
+    # tuning context — a k=8-capable record says nothing about a 4-token job)
+    ks = tuple(k for k in DECODE_KS if k <= args.gen) or (1,)
+    space = SearchSpace([ChoiceDim("k", ks)])
     db = TuningDB(args.db) if args.db else None
-    key = None
-    if db is not None:
-        key = make_key(
-            "serve/decode_k", space=space,
-            extra={"arch": args.arch, "tiny": args.tiny, "batch": args.batch},
-        )
-    at = Autotuning(space=space, ignore=1,
-                    optimizer=CSA(1, num_opt=3, max_iter=4, seed=0), cache=True,
-                    db=db, key=key)
-    if at.finished and at.warm_started:
-        print(f"tuning db hit: decode k={at.point['k']} (no online tuning)")
-    fns = {}
+    extra = {"arch": args.arch, "tiny": args.tiny, "batch": args.batch}
+    key = make_key("serve/decode_k", space=space, extra=extra) if db else None
     pos = jnp.int32(P)
-    if not args.no_tune:
-        # pre-compile every candidate fusion depth concurrently so the tuner's
-        # first visit to each k costs a dict lookup, not a compile, and the
-        # token stream never stalls; on a DB hit only the stored best is needed
-        variants = [k for k in space.dims[0].values if k <= args.gen]
-        if at.finished:
-            # the stored best may exceed --gen (or any candidate value):
-            # precompile exactly the k the first decode chunk will use
-            variants = [min(at.point["k"], args.gen)]
+    tail_fns = {}  # final-chunk sizes (k > remaining): compiled on demand
+
+    if args.no_tune:
+        # static serving still honours the DB: replay the stored-best k
+        k_static = replay_decode_k(db, key, gen=args.gen)
+        if db is not None and k_static != 1:
+            print(f"--no-tune: replaying stored decode k={k_static} from {args.db}")
+        fn_static = make_multi(k_static).lower(params, token, states, pos).compile()
+        emitted = 0
         t0 = time.perf_counter()
-        with ThreadPoolExecutor(max_workers=max(1, len(variants))) as pool:
-            compiled = pool.map(
-                lambda k: make_multi(k).lower(params, token, states, pos).compile(),
-                variants,
-            )
-            fns = dict(zip(variants, compiled))
-        print(
-            f"precompiled decode variants k={variants} "
-            f"in {(time.perf_counter() - t0) * 1e3:.0f} ms"
-        )
+        while emitted < args.gen:
+            k = min(k_static, args.gen - emitted)
+            fn = fn_static if k == k_static else tail_fns.setdefault(k, make_multi(k))
+            token, states, pos, toks = fn(params, token, states, pos)
+            jax.block_until_ready(toks)
+            emitted += k
+        wall = time.perf_counter() - t0
+        print(f"decode: {emitted} tok/seq x {B} in {wall*1e3:.0f} ms "
+              f"({B*emitted/wall:.0f} tok/s); static k={k_static}")
+        return
+
+    # adaptive serving: per-(arch, batch) decode-k context with background
+    # candidate compiles and mid-stream drift re-tuning
+    router = ContextRouter(db=db, jobs=max(1, len(DECODE_KS)))
+    router.register(
+        "serve/decode_k",
+        space=lambda: space,
+        build=lambda point: make_multi(point["k"]).lower(
+            params, token, states, pos).compile(),
+        defaults=lambda: {"k": 1},
+        epsilon=args.epsilon,
+        num_opt=3,
+        max_iter=4,
+        drift={"window": 8, "min_samples": 4, "factor": 1.5},
+        extra=extra,
+    )
+    tuner = router.tuner("serve/decode_k")
+    # prewarm every candidate that fits the stream (on a DB hit, just the
+    # stored best) so the first token needs zero in-band compiles
+    if tuner.finished:
+        points = [{"k": min(int(tuner.best_point["k"]), args.gen)}]
+        print(f"tuning db hit: decode k={tuner.best_point['k']} (no online tuning)")
+    else:
+        points = [{"k": k} for k in ks]
+    t0 = time.perf_counter()
+    tuner.prewarm(points, wait=True)
+    print(f"precompiled decode variants k={[p['k'] for p in points]} "
+          f"in {(time.perf_counter() - t0) * 1e3:.0f} ms")
+
     emitted = 0
     t0 = time.perf_counter()
     while emitted < args.gen:
-        k = 1 if args.no_tune else at.point["k"]
-        k = min(k, args.gen - emitted)
-        fn = fns.setdefault(k, make_multi(k))
+        rem = args.gen - emitted
+        if rem < ks[-1]:
+            # stream tail: not every candidate fits any more, so don't
+            # consume a routing decision that might be unmeasurable — serve
+            # the clamped best unmeasured (a shorter scan is a different
+            # program, its cost would not describe the candidate's k)
+            k = max(1, min(int(tuner.exploit_point().get("k", 1)), rem))
+            fn = tuner.executable_for({"k": k}) if k in ks else None
+            if fn is None:
+                fn = tail_fns.setdefault(k, make_multi(k))
+            token, states, pos, toks = fn(params, token, states, pos)
+            jax.block_until_ready(toks)
+            emitted += k
+            continue
+        decision = router.begin("serve/decode_k")
+        k = int(decision.point["k"])  # always <= ks[-1] <= rem here
         tc = time.perf_counter()
-        token, states, pos, toks = fn(params, token, states, pos)
+        if decision.executable is not None:
+            token, states, pos, toks = decision.executable(params, token, states, pos)
+        else:  # cold exploit before the background build lands
+            fn = tail_fns.setdefault(k, make_multi(k))
+            token, states, pos, toks = fn(params, token, states, pos)
         jax.block_until_ready(toks)
-        if not args.no_tune:
-            at.exec((time.perf_counter() - tc) / k)
+        router.observe(decision, (time.perf_counter() - tc) / k)
         emitted += k
     wall = time.perf_counter() - t0
+    rs = router.stats()
     print(f"decode: {emitted} tok/seq x {B} in {wall*1e3:.0f} ms "
-          f"({B*emitted/wall:.0f} tok/s); tuned k={at.best_point.get('k')}")
+          f"({B*emitted/wall:.0f} tok/s); tuned k={tuner.best_point.get('k')}")
+    print(f"router: {rs['explores']} explore / {rs['exploits']} exploit chunks, "
+          f"{rs['drift_resets']} drift re-tunes, "
+          f"{rs['cache']['misses']} compiles ({rs['inband_builds']} in-band), "
+          f"{rs['cache']['recompiles']} recompiles")
 
 
 if __name__ == "__main__":

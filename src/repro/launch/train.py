@@ -26,6 +26,12 @@ def main():
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--tune", action="store_true", help="PATSMA single-iteration mode")
+    ap.add_argument("--runtime", type=str, default=None, choices=["adaptive"],
+                    help="adaptive: keep tuning while training (epsilon-rationed "
+                         "exploration + drift-triggered warm re-search)")
+    ap.add_argument("--epsilon", type=float, default=1.0,
+                    help="explored fraction of steps while a search is live "
+                         "(adaptive runtime mode)")
     ap.add_argument("--db", type=str, default=None,
                     help="tuning DB path; warm-starts step knobs across runs")
     ap.add_argument("--seed", type=int, default=0)
@@ -48,8 +54,10 @@ def main():
         seed=args.seed,
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
-        tune=args.tune,
+        tune=args.tune or args.runtime is not None,
         tune_db=args.db,
+        runtime=args.runtime,
+        tune_epsilon=args.epsilon,
     )
     hist = job.run()
     print(json.dumps({
@@ -58,6 +66,7 @@ def main():
         "mean_step_s": sum(hist["step_time"]) / len(hist["step_time"]),
         "final_knobs": hist["final_knobs"],
         "watchdog_events": len(hist["watchdog_events"]),
+        "resets": len(hist["resets"]),
     }, indent=2))
 
 

@@ -1,4 +1,54 @@
-"""Runtime: fault-tolerant training driver, watchdog, elastic restore."""
-from .driver import TrainJob, Watchdog
+"""repro.runtime — keep a *running* program tuned.
 
-__all__ = ["TrainJob", "Watchdog"]
+PR 1 made tuning results persistent (the DB), PR 2 made a single search
+fast (batched ask/tell + AOT fan-out); this package makes tuning *live*,
+the paper's runtime-mode claim at serving scale:
+
+* :mod:`repro.runtime.context` — :class:`ContextRouter`: buckets live calls
+  into tuning contexts (name × pow2 shape-bucket × caller extra, reusing
+  ``TuningKey`` fingerprints) and dispatches each at its current best.
+* :mod:`repro.runtime.online` — :class:`OnlineTuner`: streams an ε-rationed
+  fraction of real request timings into the ask/tell search, compiling
+  candidates off-thread so serving never blocks on XLA.
+* :mod:`repro.runtime.drift` — :class:`DriftDetector`: sliding-window cost
+  statistics over the exploit stream; degradation triggers
+  ``Autotuning.reset(level)`` + a half-budget warm re-search, recommitted
+  to the DB with ``source="online"``.
+* :mod:`repro.runtime.driver` — the fault-tolerant training driver
+  (:class:`TrainJob`, :class:`Watchdog`), now with a ``runtime="adaptive"``
+  mode that delegates drift handling to the online tuner.
+
+``TrainJob``/``Watchdog`` import the full model stack, so they load lazily;
+the online-tuning classes above are light (numpy + repro.core only).
+"""
+from .context import ContextRouter, RouteSpec, bucket_args, pow2_bucket
+from .drift import DriftDetector
+from .online import EXPLOIT, EXPLORE, Decision, OnlineTuner
+
+__all__ = [
+    "ContextRouter",
+    "RouteSpec",
+    "pow2_bucket",
+    "bucket_args",
+    "DriftDetector",
+    "OnlineTuner",
+    "Decision",
+    "EXPLORE",
+    "EXPLOIT",
+    "TrainJob",
+    "Watchdog",
+]
+
+_DRIVER_NAMES = ("TrainJob", "Watchdog")
+
+
+def __getattr__(name):  # lazy: driver pulls in models/optim/train
+    if name in _DRIVER_NAMES:
+        from . import driver
+
+        return getattr(driver, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,323 @@
+"""ContextRouter — bucket live calls into tuning contexts and dispatch each
+at that context's current-best knobs.
+
+A *context* is what a tuning result is valid for: (route name ×
+shape-bucket × caller extra such as batch size), fingerprinted with the
+same :class:`repro.tuning.TuningKey` machinery the persistent DB uses — so
+pretuned records exact-hit router contexts, near-miss records warm-start
+them, and whatever the router learns online commits straight back.
+
+Shapes are bucketed to the next power of two (:func:`pow2_bucket`) before
+fingerprinting: a decode call at sequence length 1000 and one at 1024 share
+knobs (good tiles move with the problem size by powers of two — the same
+assumption behind ``TuningKey.distance``), while 64 → 128 opens a fresh
+context.  Exact shapes still key the *executables* (an XLA artifact is
+shape-exact); only the knob search is shared across a bucket.
+
+Each context owns an :class:`~repro.runtime.online.OnlineTuner` (created
+lazily on first sight, DB-warm-started) with its own
+:class:`~repro.runtime.drift.DriftDetector`; the router is the front door::
+
+    router = ContextRouter(db=TuningDB("tuned/serve.json"))
+    router.register("decode", space=lambda *a: SearchSpace([...]),
+                    build=compile_decode_step, epsilon=0.1)
+    ...
+    d = router.begin("decode", token_batch)      # knobs for THIS request
+    out = d.executable(token_batch) if d.executable else fallback(d.point)
+    router.observe(d, measured_seconds)          # feeds search / drift
+
+``begin``/``observe`` are serving-thread calls; compiles happen off-thread
+inside the tuners (see :mod:`repro.runtime.online`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Mapping, Optional
+
+from repro.core import CSA, Autotuning, ExecutableCache
+from repro.core.optimizer import NumericalOptimizer
+
+from .drift import DriftDetector
+from .online import Decision, OnlineTuner
+
+__all__ = ["ContextRouter", "RouteSpec", "pow2_bucket", "bucket_args"]
+
+
+# ----------------------------------------------------------- shape bucketing
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (n >= 1); the canonical shape bucket."""
+    n = int(n)
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()
+
+
+class _BucketedArray:
+    """Shape/dtype proxy standing in for an array when fingerprinting a
+    bucketed context (``signature_of`` only reads these two attributes)."""
+
+    __slots__ = ("shape", "dtype")
+
+    def __init__(self, shape: tuple, dtype: Any) -> None:
+        self.shape = tuple(shape)
+        self.dtype = dtype
+
+
+def bucket_args(
+    args=(), kwargs: Optional[Mapping[str, Any]] = None,
+    bucket: Callable[[int], int] = pow2_bucket,
+):
+    """Replace every array in a call's arguments by a proxy whose dims are
+    bucketed; non-array values pass through.  Returns ``(args, kwargs)``."""
+
+    def one(v):
+        if hasattr(v, "shape") and hasattr(v, "dtype"):
+            return _BucketedArray([bucket(int(d)) for d in v.shape], v.dtype)
+        return v
+
+    return tuple(one(v) for v in args), {k: one(v) for k, v in (kwargs or {}).items()}
+
+
+# ----------------------------------------------------------------- registry
+@dataclasses.dataclass
+class RouteSpec:
+    """How to tune one route (a kernel, a decode step, ...).
+
+    ``space``/``defaults``/``build`` receive the live call's arguments, so
+    knob domains follow the request shapes exactly as the kernel registry's
+    specs do.  ``drift=None`` disables drift detection for the route;
+    otherwise the dict is passed to :class:`DriftDetector`.
+    """
+
+    name: str
+    space: Callable  # (*args, **kwargs) -> SearchSpace
+    build: Optional[Callable] = None  # (point, *args, **kwargs) -> executable
+    defaults: Optional[Callable] = None  # (*args, **kwargs) -> dict
+    epsilon: float = 0.1
+    ignore: int = 0
+    num_opt: int = 3
+    max_iter: int = 4
+    seed: int = 0
+    optimizer: Optional[Callable[..., NumericalOptimizer]] = None  # (space) -> opt
+    drift: Optional[dict] = dataclasses.field(default_factory=dict)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+class ContextRouter:
+    """Maps live calls onto per-context :class:`OnlineTuner` instances.
+
+    One router per process (or per serving component); contexts are created
+    lazily as traffic reveals them and warm-start from ``db`` — an exact
+    fingerprint hit serves the stored best from the first request with zero
+    exploration, a neighbor record seeds a half-budget search.
+    """
+
+    def __init__(
+        self,
+        *,
+        db=None,
+        cache: Optional[ExecutableCache] = None,
+        jobs: int = 1,
+        bucket: Callable[[int], int] = pow2_bucket,
+        db_source: str = "online",
+        warm_start: bool = True,
+    ) -> None:
+        self.db = db
+        # like OnlineTuner's default: never memoize build failures — a
+        # transient compile error must not poison a candidate for the
+        # process lifetime (callers with a failure classifier, e.g. the
+        # kernel layer's _EXEC_CACHE, pass their own cache)
+        self.cache = cache if cache is not None else ExecutableCache(
+            cache_failures=lambda e: False
+        )
+        self._jobs = max(1, int(jobs))
+        self._bucket = bucket
+        self._db_source = str(db_source)
+        self._warm_start = bool(warm_start)
+        self._specs: dict = {}
+        self._tuners: dict = {}  # encoded TuningKey -> OnlineTuner
+        self._fast: dict = {}  # exact call signature -> OnlineTuner (memo)
+        self._fast_max = 4096  # bound: naturally varied exact shapes on a
+        # long-lived server must not grow the memo forever (rebuild is one
+        # make_key, so wholesale clearing is cheap)
+
+    # ---------------------------------------------------------- registration
+    def register(self, name: str, **fields) -> RouteSpec:
+        """Register a route; ``fields`` are :class:`RouteSpec` fields."""
+        spec = RouteSpec(name=name, **fields)
+        self._specs[name] = spec
+        return spec
+
+    def spec(self, name: str) -> RouteSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown route {name!r}; registered: {sorted(self._specs)}"
+            ) from None
+
+    # ------------------------------------------------------------- contexts
+    def context_key(self, name: str, args=(), kwargs=None, extra=None, space=None):
+        """The bucketed :class:`TuningKey` fingerprint of one call context.
+
+        Both the signature *and* the search space come from the bucketed
+        shapes: every exact shape in a bucket must map to the identical
+        fingerprint (and knob domain), or contexts would fragment by
+        whichever exact shape arrived first and pretuned pow2 records could
+        never exact-hit non-pow2 traffic."""
+        from repro.tuning import make_key
+
+        spec = self.spec(name)
+        kwargs = kwargs or {}
+        b_args, b_kwargs = bucket_args(args, kwargs, self._bucket)
+        if space is None:
+            space = spec.space(*b_args, **b_kwargs)
+        return make_key(
+            name, args=b_args, kwargs=b_kwargs, space=space,
+            extra={**spec.extra, **(extra or {})},
+        )
+
+    def _call_sig(self, name, args, kwargs, extra):
+        try:
+            parts = [name, json.dumps(dict(extra or {}), sort_keys=True, default=repr)]
+            for src in (args, sorted((kwargs or {}).items())):
+                for v in src:
+                    if hasattr(v, "shape") and hasattr(v, "dtype"):
+                        parts.append(("a", tuple(int(d) for d in v.shape), str(v.dtype)))
+                    else:
+                        parts.append(("p", repr(v)))
+            return tuple(parts)
+        except Exception:
+            return None
+
+    def tuner(self, name: str, *args, extra=None, **kwargs) -> OnlineTuner:
+        """The (lazily created) tuner owning this call's context."""
+        sig = self._call_sig(name, args, kwargs, extra)
+        t = self._fast.get(sig) if sig is not None else None
+        if t is not None:
+            return t
+        spec = self.spec(name)
+        b_args, b_kwargs = bucket_args(args, kwargs, self._bucket)
+        # knob domain from the bucketed shapes (shared across the bucket);
+        # candidates that turn out illegal for an off-bucket *exact* shape
+        # fail their build and are absorbed as inf by the tuner
+        space = spec.space(*b_args, **b_kwargs)
+        key = self.context_key(name, args, kwargs, extra=extra, space=space)
+        enc = key.encode()
+        t = self._tuners.get(enc)
+        if t is None:
+            if spec.optimizer is not None:
+                opt = spec.optimizer(space)
+            else:
+                opt = CSA(
+                    len(space), num_opt=spec.num_opt,
+                    max_iter=spec.max_iter, seed=spec.seed,
+                )
+            at = Autotuning(
+                space=space,
+                ignore=spec.ignore,
+                optimizer=opt,
+                cache=True,
+                db=self.db,
+                key=key,
+                warm_start=self._warm_start,
+                db_source=self._db_source,
+            )
+            drift = DriftDetector(**spec.drift) if spec.drift is not None else None
+            # defaults from the EXACT shapes: the caller's fallback dispatch
+            # runs the kernel with these knobs on the real arguments, so they
+            # must be legal for the shapes actually served, not the bucket
+            default_point = (
+                spec.defaults(*args, **kwargs) if spec.defaults is not None else None
+            )
+            t = OnlineTuner(
+                at,
+                build=spec.build,
+                cache=self.cache if spec.build is not None else None,
+                jobs=self._jobs,
+                epsilon=spec.epsilon,
+                drift=drift,
+                default_point=default_point,
+                name=enc,  # executables are keyed per-context + exact shapes
+            )
+            self._tuners[enc] = t
+        if sig is not None:
+            if len(self._fast) >= self._fast_max:
+                self._fast.clear()
+            self._fast[sig] = t
+        return t
+
+    # ------------------------------------------------------------- serving
+    def begin(self, name: str, *args, extra=None, **kwargs) -> Decision:
+        """Route one call: returns the decision of its context's tuner.
+
+        A decision that carries an ``executable`` is always safe to run —
+        the artifact was compiled for this exact call.  A decision *without*
+        one (cold context, compile in flight) is served by the caller's
+        fallback dispatch, so its knobs are clamped from the bucket's space
+        into the exact shapes' space first: a bucket-legal block size is not
+        necessarily legal for an off-bucket exact shape."""
+        d = self.tuner(name, *args, extra=extra, **kwargs).begin(*args, **kwargs)
+        if d.executable is None and (args or kwargs):
+            try:
+                exact_space = self.spec(name).space(*args, **kwargs)
+                d.point = exact_space.decode(exact_space.encode(d.point))
+            except Exception:
+                pass  # incompatible knobs: leave as-is, caller's fallback guards
+        return d
+
+    def observe(self, decision: Decision, cost: float) -> int:
+        """Feed a served decision's measured cost back to its tuner."""
+        if decision.tuner is None:
+            raise ValueError("decision is not attached to a tuner")
+        return decision.tuner.observe(decision, cost)
+
+    def prewarm(self, name: str, points, *args, extra=None, wait=True, **kwargs):
+        """Compile a route's candidate executables before serving starts."""
+        self.tuner(name, *args, extra=extra, **kwargs).prewarm(
+            points, *args, wait=wait, **kwargs
+        )
+
+    def wait_pending(self) -> None:
+        for t in self._tuners.values():
+            t.wait_pending()
+
+    # ------------------------------------------------------------ inspection
+    def contexts(self) -> list:
+        """One summary dict per live context (for logs / debugging)."""
+        out = []
+        for enc, t in self._tuners.items():
+            out.append(
+                {
+                    "key": enc,
+                    "finished": t.finished,
+                    "best_point": t.best_point,
+                    "warm_started": t.at.warm_started,
+                    "stats": t.stats(),
+                }
+            )
+        return out
+
+    def stats(self) -> dict:
+        """Aggregate serving counters across every context."""
+        total = {
+            "contexts": len(self._tuners),
+            "calls": 0,
+            "explores": 0,
+            "exploits": 0,
+            "deferred_explores": 0,
+            "inband_builds": 0,
+            "candidate_failures": 0,
+            "drift_resets": 0,
+            "searches_completed": 0,
+        }
+        for t in self._tuners.values():
+            for k in (
+                "calls", "explores", "exploits", "deferred_explores",
+                "inband_builds", "candidate_failures", "drift_resets",
+                "searches_completed",
+            ):
+                total[k] += t.stats_[k]
+        total["cache"] = self.cache.stats()
+        return total

@@ -5,6 +5,9 @@ Wires together the substrates: data pipeline, train step, checkpointing
 mode riding the training loop — paper Fig. 1a), and the step-time watchdog
 that calls ``Autotuning.reset(level)`` when the environment drifts
 (straggler mitigation: the paper's reset semantics at datacenter scale).
+With ``runtime="adaptive"`` the drift handling moves inside the
+:class:`~repro.core.TunedStep` (an ``OnlineTuner`` + ``DriftDetector``
+doing a warm half-budget re-search) and the watchdog stays observer-only.
 
 Crash/preemption recovery: the driver resumes from the newest complete
 checkpoint; the data pipeline is a pure function of (seed, step) so the
@@ -80,6 +83,13 @@ class TrainJob:
     tune_db: Optional[str] = None  # tuning DB path: warm-start knobs across runs
     ignore: int = 1
     watchdog_factor: float = 1.8
+    # runtime="adaptive": the TunedStep owns drift handling (OnlineTuner +
+    # DriftDetector with a warm half-budget re-search) instead of the
+    # external watchdog->reset wiring below; epsilon rations how many steps
+    # measure a candidate while a search is live (1.0 = classic behaviour)
+    runtime: Optional[str] = None
+    tune_epsilon: float = 1.0
+    drift: Optional[dict] = None  # DriftDetector kwargs for adaptive mode
     exec_cfg: ExecConfig = dataclasses.field(default_factory=lambda: ExecConfig(rec_chunk=8))
     # test hooks
     delay_hook: Optional[Callable[[int], None]] = None
@@ -132,6 +142,9 @@ class TrainJob:
                     "global_batch": self.global_batch,
                     "seq_len": self.seq_len,
                 },
+                runtime=self.runtime,
+                epsilon=self.tune_epsilon,
+                drift=self.drift,
             )
         else:
             step_fn = factory()
@@ -150,7 +163,12 @@ class TrainJob:
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             level = watchdog.check(dt, step)
-            if level and tuned is not None and tuned.finished:
+            if (
+                level
+                and tuned is not None
+                and tuned.finished
+                and tuned.online is None  # adaptive mode resets itself
+            ):
                 # environment drift: re-enter tuning (paper reset semantics)
                 tuned.reset(level - 1)
                 history["resets"].append({"step": step, "level": level - 1})
@@ -170,4 +188,12 @@ class TrainJob:
             ckpt.save(self.steps - 1, (params, opt_state))
         history["final_knobs"] = tuned.best_knobs if tuned is not None else {}
         history["watchdog_events"] = watchdog.events
+        if tuned is not None and tuned.online is not None:
+            # drift resets happened inside the TunedStep; surface them in the
+            # same shape the watchdog path uses (seq counts calls from resume)
+            for ev in tuned.drift_events:
+                history["resets"].append(
+                    {"step": start_step + ev["seq"] - 1, "level": ev["level"]}
+                )
+            history["online_stats"] = tuned.online.stats()
         return history

@@ -1,0 +1,439 @@
+"""OnlineTuner — PATSMA tuning in-band with live traffic.
+
+The offline modes (PR 1/PR 2) stop the world: ``entire_exec*`` runs the
+whole search on a replica before serving starts.  :class:`OnlineTuner`
+instead rides a live request stream:
+
+* an **ε-fraction** of calls *explore* — they serve the request at the
+  search's current candidate and feed the measured cost into the
+  ``Autotuning`` driver (the paper's Single-Iteration mode, rationed);
+* the remaining calls *exploit* the best-known knobs, and once the search
+  has converged their costs stream into a :class:`~repro.runtime.drift
+  .DriftDetector`;
+* when drift fires, the tuner calls ``Autotuning.reset(level)`` with a
+  **warm re-search**: the optimizer is re-seeded around the deployed point
+  at half budget, the deployed point's fresh (post-drift) cost is recorded
+  via ``Autotuning.note``, and the refreshed result is committed back to
+  the tuning DB with ``source="online"`` when the re-search converges.
+
+Exploration never blocks the serving thread on XLA: candidate executables
+are built through an :class:`~repro.core.costs.ExecutableCache` on a
+background thread pool, and a candidate is only *offered* for exploration
+once its executable is ready (``ExecutableCache.peek`` — a non-building
+probe).  A scheduled exploration whose compile is still in flight silently
+degrades to exploitation and retries on a later call.  Candidates whose
+build *failed* are charged ``inf`` via ``Autotuning.skip`` without spending
+a request on them.  Builds are admission-controlled per exact call
+signature: a shape seen only once is served by the caller's fallback
+dispatch rather than paying an AOT compile that may never be reused.
+
+The ε-scheduler is a deterministic credit counter, not a coin flip: call
+``i`` of a search episode explores iff ``explored + 1 <= ε * i`` (so the
+explored fraction tracks ε exactly and tests can assert the schedule).
+Episode counters restart when a search converges or a drift reset begins.
+
+``begin``/``observe`` must be called from a single serving thread; only the
+builds run concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import wait as _wait_futures
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core import Autotuning, ExecutableCache
+
+from .drift import DriftDetector
+
+__all__ = ["Decision", "OnlineTuner", "EXPLORE", "EXPLOIT"]
+
+EXPLORE = "explore"
+EXPLOIT = "exploit"
+
+_ABSENT = object()  # peek() sentinel: "no completed build for this key"
+
+
+@dataclasses.dataclass
+class Decision:
+    """One routed call: which knobs to serve this request with.
+
+    ``executable`` is the ready AOT-compiled artifact for ``point`` when the
+    tuner has one (never compiled on the calling thread), else ``None`` and
+    the caller uses its own fallback dispatch.  Hand the decision back to
+    :meth:`OnlineTuner.observe` (or ``ContextRouter.observe``) with the
+    measured cost.
+    """
+
+    kind: str  # EXPLORE | EXPLOIT
+    point: dict
+    executable: Any = None
+    seq: int = 0
+    tuner: Optional["OnlineTuner"] = dataclasses.field(default=None, repr=False)
+
+
+class OnlineTuner:
+    """Explore/exploit wrapper around one :class:`Autotuning` context.
+
+    Parameters
+    ----------
+    at:
+        The search driver (may be DB-warm-started, may already be finished
+        on an exact DB hit — then every call exploits the stored best).
+    build:
+        Optional ``build(point, *args, **kwargs) -> executable``.  When
+        given, explore candidates are compiled off-thread through ``cache``
+        and exploration waits (without blocking) for readiness.  When
+        ``None`` (analytic costs, or compile time absorbed by ``ignore``),
+        every candidate is immediately explorable.
+    epsilon:
+        Target explored fraction of calls while a search is active.
+        ``1.0`` reproduces the paper's Single-Iteration mode (every call
+        measures); ``0.0`` never explores (replay-only).
+    drift:
+        Optional :class:`DriftDetector` fed with exploit costs once the
+        search has converged; a non-zero level triggers the warm re-search.
+    warm_frac / warm_spread:
+        Budget fraction and seeding spread of the drift-triggered re-search.
+    default_point:
+        Knobs to exploit before any measurement exists (a registered
+        kernel's defaults); otherwise the driver's current best is used.
+    """
+
+    def __init__(
+        self,
+        at: Autotuning,
+        *,
+        build: Optional[Callable] = None,
+        cache: Optional[ExecutableCache] = None,
+        jobs: int = 1,
+        epsilon: float = 0.1,
+        drift: Optional[DriftDetector] = None,
+        warm_frac: float = 0.5,
+        warm_spread: float = 0.2,
+        default_point: Optional[dict] = None,
+        name: str = "online",
+    ) -> None:
+        if not 0.0 <= epsilon <= 1.0:
+            raise ValueError(f"epsilon must be in [0, 1], got {epsilon}")
+        self.at = at
+        self.epsilon = float(epsilon)
+        self.drift = drift
+        self.warm_frac = float(warm_frac)
+        self.warm_spread = float(warm_spread)
+        self.name = str(name)
+        self._build = build
+        # default cache never memoizes failures: without domain knowledge of
+        # which build errors are deterministic (the kernel layer's cache has
+        # that via its cache_failures predicate), a transient compile failure
+        # (e.g. RESOURCE_EXHAUSTED under load) must not poison the candidate
+        # for the process lifetime — a revisit retries the build instead
+        self._cache = cache if cache is not None else (
+            ExecutableCache(cache_failures=lambda e: False)
+            if build is not None else None
+        )
+        self._jobs = max(1, int(jobs))
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pending: dict = {}  # exec key -> Future (builds this tuner asked for)
+        self._sig_seen: dict = {}  # exact call signature -> sightings (bounded)
+        self._default = dict(default_point) if default_point else None
+        self._seq = 0
+        # per-search-episode ε accounting (reset on converge / drift reset)
+        self._episode_calls = 0
+        self._episode_explores = 0
+        self.events: list = []  # drift resets, with context
+        self.stats_ = {
+            "calls": 0,
+            "explores": 0,
+            "exploits": 0,
+            "deferred_explores": 0,  # scheduled explore, compile still in flight
+            "inband_builds": 0,  # builds that ran on the serving thread (must stay 0)
+            "compiles_submitted": 0,
+            "candidate_failures": 0,  # candidates charged inf for a failed build
+            "drift_resets": 0,
+            "searches_completed": 0,
+        }
+
+    # ------------------------------------------------------------ properties
+    @property
+    def finished(self) -> bool:
+        return self.at.finished
+
+    @property
+    def best_point(self) -> dict:
+        return self.at.best_point
+
+    def exploit_point(self) -> dict:
+        """Knobs a non-exploring call should serve with *right now*."""
+        at = self.at
+        if at.finished or np.isfinite(at.best_cost):
+            return at.best_point
+        return dict(self._default) if self._default is not None else at.best_point
+
+    def stats(self) -> dict:
+        out = dict(self.stats_)
+        out["finished"] = self.at.finished
+        out["num_evals"] = self.at.num_evals
+        if self._cache is not None:
+            out["cache"] = self._cache.stats()
+        if self.drift is not None:
+            out["drift"] = self.drift.stats()
+        return out
+
+    # -------------------------------------------------------- build plumbing
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._jobs, thread_name_prefix="patsma-online"
+            )
+        return self._pool
+
+    @staticmethod
+    def _call_sig(args: tuple, kwargs: dict) -> str:
+        from repro.tuning.records import signature_of
+
+        return json.dumps(signature_of(args, kwargs), default=repr, sort_keys=True)
+
+    def _exec_key(self, point: dict, args: tuple, kwargs: dict):
+        return (self.name, self.at.space.key(point), self._call_sig(args, kwargs))
+
+    def _note_signature(self, args: tuple, kwargs: dict) -> bool:
+        """Admission control for background builds: record this call's exact
+        signature and admit compiles only once it has been seen more than
+        once.  Long-tail one-off shapes (each request a new sequence length)
+        are served by the caller's fallback dispatch instead of paying one
+        AOT compile per request — compiling for a shape that never returns
+        is pure waste and churns the shared executable cache.  Signature-free
+        calls (serve's fixed decode context, TunedStep) are always admitted."""
+        if not args and not kwargs:
+            return True
+        sig = self._call_sig(args, kwargs)
+        if len(self._sig_seen) >= 4096:
+            self._sig_seen.clear()
+        n = self._sig_seen.get(sig, 0) + 1
+        self._sig_seen[sig] = n
+        return n >= 2
+
+    def _submit(self, point: dict, args: tuple, kwargs: dict) -> Optional[Future]:
+        """Queue a background build for ``point`` (idempotent); returns the
+        future tracking it.  Never builds on the calling thread."""
+        if self._build is None:
+            return None
+        key = self._exec_key(point, args, kwargs)
+        fut = self._pending.get(key)
+        if fut is not None:
+            return fut
+        done = self._cache.peek(key, default=_ABSENT)
+        if done is not _ABSENT:  # someone else (prewarm, sibling) built it
+            fut = Future()
+            fut.set_result(done)
+            self._pending[key] = fut
+            return fut
+        point = dict(point)
+        args = tuple(args)
+        kwargs = dict(kwargs)
+        serving_thread = threading.get_ident()
+
+        def job():
+            def build():
+                if threading.get_ident() == serving_thread:
+                    # only possible if a caller runs the future inline —
+                    # surfaced in stats so benchmarks can assert it never does
+                    self.stats_["inband_builds"] += 1
+                return self._build(point, *args, **kwargs)
+
+            return self._cache.get_or_build(key, build)
+
+        fut = self._ensure_pool().submit(job)
+        self._pending[key] = fut
+        self.stats_["compiles_submitted"] += 1
+        if len(self._pending) > 4 * self._cache.maxsize:
+            self._pending = {k: f for k, f in self._pending.items() if not f.done()}
+        return fut
+
+    def _ready(self, point: dict, args: tuple, kwargs: dict, admit: bool = True):
+        """(ready, executable-or-exception-or-None) for ``point``, submitting
+        a background build on first sight (if ``admit``).  Never blocks."""
+        if self._build is None:
+            return True, None
+        if not admit:
+            key = self._exec_key(point, args, kwargs)
+            if (
+                self._pending.get(key) is None
+                and self._cache.peek(key, default=_ABSENT) is _ABSENT
+            ):
+                return False, None  # no build exists and none is admitted
+        fut = self._submit(point, args, kwargs)
+        if fut is None or not fut.done():
+            return False, None
+        result = fut.result()
+        if isinstance(result, BaseException):
+            key = self._exec_key(point, args, kwargs)
+            if self._cache.peek(key, default=_ABSENT) is _ABSENT:
+                # the cache declined to keep this failure (transient): drop
+                # our memo of the failed future too, so a revisit — e.g. the
+                # same candidate in a drift re-search — rebuilds
+                self._pending.pop(key, None)
+        return True, result
+
+    def _absorb_failed_candidates(self, args: tuple, kwargs: dict, admit: bool = True) -> None:
+        """Charge candidates whose executable failed to build ``inf`` without
+        spending a serving request on them."""
+        if self._build is None:
+            return
+        for _ in range(100_000):  # safety: pathological optimizer loop
+            if self.at.finished:
+                return
+            ready, ex = self._ready(self.at.point, args, kwargs, admit=admit)
+            if not ready or not isinstance(ex, BaseException):
+                return
+            self.stats_["candidate_failures"] += 1
+            self.at.skip(np.inf)
+            if self.at.finished:
+                self._on_search_complete()
+                return
+
+    def executable_for(self, point: dict, *args, **kwargs):
+        """Ready executable for ``point`` if one exists, else ``None``.
+        Non-blocking: a miss submits a background build so a later call can
+        hit; it never compiles on the calling thread."""
+        ready, ex = self._ready(dict(point), args, kwargs)
+        if ready and not isinstance(ex, BaseException):
+            return ex
+        return None
+
+    def wait_pending(self, timeout: Optional[float] = None) -> None:
+        """Block until every background build submitted so far has finished.
+        For tests, shutdown, and pre-stream prewarming — never call from the
+        serving hot path."""
+        _wait_futures(list(self._pending.values()), timeout=timeout)
+
+    def prewarm(self, points, *args, wait: bool = True, **kwargs) -> None:
+        """Submit builds for ``points`` (e.g. every candidate of a small
+        space) before serving starts; with ``wait`` blocks until done so the
+        stream begins with a fully warm cache."""
+        for p in points:
+            self._submit(dict(p), args, kwargs)
+        if wait:
+            self.wait_pending()
+
+    # ------------------------------------------------------------- decisions
+    def _want_explore(self) -> bool:
+        if self.epsilon <= 0.0:
+            return False
+        return (self._episode_explores + 1) <= self.epsilon * self._episode_calls + 1e-12
+
+    def begin(self, *args, _force_explore: bool = False, **kwargs) -> Decision:
+        """Decide how to serve the next request; call from the serving thread.
+
+        ``args``/``kwargs`` are the request's call arguments — they key the
+        executable cache (shape-exact) and are what background builds
+        compile against."""
+        self._seq += 1
+        self.stats_["calls"] += 1
+        at = self.at
+        admit = self._note_signature(args, kwargs) if self._build is not None else True
+        if not at.finished:
+            self._episode_calls += 1
+            self._absorb_failed_candidates(args, kwargs, admit=admit)
+        if not at.finished and (_force_explore or self._want_explore()):
+            ready, ex = self._ready(at.point, args, kwargs, admit=admit or _force_explore)
+            if ready and not isinstance(ex, BaseException):
+                self._episode_explores += 1
+                self.stats_["explores"] += 1
+                return Decision(EXPLORE, at.point, ex, self._seq, self)
+            if not ready:
+                self.stats_["deferred_explores"] += 1
+            # failed build: absorbed on the next call; exploit this one
+        self.stats_["exploits"] += 1
+        point = self.exploit_point()
+        executable = None
+        if self._build is not None:
+            ready, ex = self._ready(point, args, kwargs, admit=admit)
+            if ready and not isinstance(ex, BaseException):
+                executable = ex
+        return Decision(EXPLOIT, point, executable, self._seq, self)
+
+    def observe(self, decision: Decision, cost: float) -> int:
+        """Deliver the measured cost of a served decision.
+
+        Explore costs feed the search (committing to the DB on
+        convergence); exploit costs feed drift detection once the search has
+        converged.  Returns the drift level acted on this call (0 = none)."""
+        cost = float(cost)
+        at = self.at
+        if decision.kind == EXPLORE:
+            if not at.finished:
+                at.exec(cost)
+                if at.finished:
+                    self._on_search_complete()
+            return 0
+        if self.drift is not None and at.finished:
+            level = self.drift.observe(cost)
+            if level > 0:
+                self._drift_reset(level)
+                return level
+        return 0
+
+    # --------------------------------------------------------- state changes
+    def _on_search_complete(self) -> None:
+        self.stats_["searches_completed"] += 1
+        self._episode_calls = 0
+        self._episode_explores = 0
+        if self.drift is not None:
+            self.drift.rebaseline()
+
+    def _drift_reset(self, level: int) -> None:
+        """The tuned config degraded: re-enter tuning with a warm re-search
+        seeded at the deployed point, at ``warm_frac`` of the cold budget."""
+        at = self.at
+        incumbent = at.best_point
+        # the trigger event holds the post-drift median (the detector clears
+        # its recent window when it fires, so recent_median() is stale here)
+        fresh = None
+        if self.drift is not None and self.drift.events:
+            fresh = self.drift.events[-1].get("recent")
+        at.reset(
+            1 if level < 2 else 2,
+            warm_point=incumbent,
+            budget_frac=self.warm_frac,
+            spread=self.warm_spread,
+        )
+        if fresh is not None and np.isfinite(fresh):
+            # the incumbent's live post-drift cost: keeps best_point/commit
+            # honest even if the re-search never revisits it
+            at.note(incumbent, float(fresh))
+        if self.drift is not None:
+            self.drift.rebaseline()
+        self._episode_calls = 0
+        self._episode_explores = 0
+        self.stats_["drift_resets"] += 1
+        self.events.append(
+            {"seq": self._seq, "level": int(level), "point": dict(incumbent),
+             "recent_cost": fresh}
+        )
+
+    # ------------------------------------------------------------- offline
+    def drive(self, cost_fn: Callable[[dict], float], *args, **kwargs) -> dict:
+        """Entire-Execution glue: run the search to completion now, with
+        ``cost_fn(point)`` supplying each candidate's cost (the launcher /
+        hillclimb loop).  Exploration is forced — ε only rations *live*
+        traffic, and here every call is a replica evaluation.  Offline there
+        is no serving thread to protect, so a pending candidate build is
+        simply waited for."""
+        stalls = 0
+        while not self.at.finished:
+            d = self.begin(*args, _force_explore=True, **kwargs)
+            if d.kind != EXPLORE:  # compile in flight or just failed
+                self.wait_pending()
+                stalls += 1
+                if stalls > 10_000:  # safety: candidate never materializes
+                    break
+                continue
+            stalls = 0
+            self.observe(d, float(cost_fn(dict(d.point))))
+        return self.at.best_point

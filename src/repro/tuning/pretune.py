@@ -3,6 +3,9 @@
     PYTHONPATH=src python -m repro.tuning.pretune --db tuned/cpu.json --smoke
     PYTHONPATH=src python -m repro.tuning.pretune --db tuned/cpu.json \
         --kernel matmul --kernel flash_attention
+    PYTHONPATH=src python -m repro.tuning.pretune --db tuned/cpu.json --list
+    PYTHONPATH=src python -m repro.tuning.pretune --db tuned/serve.json \
+        --only 'matmul/128*'
 
 Sweeps the registered (kernel, shape) grid, runs the PATSMA search per
 context, and commits every record atomically.  Each context's candidate
@@ -13,22 +16,42 @@ suite and CI replay: the suite's kernel dispatches become exact fingerprint
 hits, so they skip straight to the stored best with zero re-measurement.  On
 a TPU host the same command (without ``--smoke``) produces the production
 snapshot for that device kind.
+
+``--list`` prints the registered grid with each case's DB status (exact hit
+/ warm neighbor / cold) without tuning anything, and ``--only <glob>``
+restricts a sweep to matching cases — together they are how a serving
+deployment seeds exactly the router contexts its traffic will touch,
+without sweeping the whole grid.
 """
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import sys
 import time
 
 
-def _cases(smoke: bool):
-    """(kernel name, thunk building the call args) grid.  Thunks defer array
-    construction so ``--kernel`` filtering never materializes unused inputs."""
+def _cases(smoke: bool, abstract: bool = False):
+    """(kernel name, case label, thunk building the call args) grid.  Thunks
+    defer array construction so filtering never materializes unused inputs.
+    ``abstract=True`` yields ``jax.ShapeDtypeStruct`` stand-ins — enough for
+    fingerprints and search spaces (both read only shape/dtype), so
+    ``--list`` stays metadata-only instead of allocating the whole grid."""
     import jax
     import jax.numpy as jnp
 
-    def rnd(seed, shape, dtype=jnp.float32):
-        return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+    if abstract:
+        def rnd(seed, shape, dtype=jnp.float32):
+            return jax.ShapeDtypeStruct(shape, dtype)
+
+        def filled(value, shape, dtype=jnp.float32):
+            return jax.ShapeDtypeStruct(shape, dtype)
+    else:
+        def rnd(seed, shape, dtype=jnp.float32):
+            return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+        def filled(value, shape, dtype=jnp.float32):
+            return jnp.full(shape, value, dtype)
 
     if smoke:
         mm_shapes = [(64, 64, 64), (128, 128, 128)]
@@ -43,11 +66,15 @@ def _cases(smoke: bool):
 
     cases = []
     for m, n, k in mm_shapes:
-        cases.append(("matmul", lambda m=m, n=n, k=k: (rnd(0, (m, k)), rnd(1, (k, n)))))
+        cases.append(
+            ("matmul", f"{m}x{n}x{k}",
+             lambda m=m, n=n, k=k: (rnd(0, (m, k)), rnd(1, (k, n))))
+        )
     for b, h, kh, s, hd in fa_shapes:
         cases.append(
             (
                 "flash_attention",
+                f"b{b}h{h}kh{kh}s{s}d{hd}",
                 lambda b=b, h=h, kh=kh, s=s, hd=hd: (
                     rnd(0, (b, s, h, hd)),
                     rnd(1, (b, kh, s, hd)),
@@ -59,11 +86,12 @@ def _cases(smoke: bool):
         cases.append(
             (
                 "decode_attention",
+                f"b{b}h{h}kh{kh}s{s}d{hd}",
                 lambda b=b, h=h, kh=kh, s=s, hd=hd: (
                     rnd(0, (b, h, hd)),
                     rnd(1, (b, kh, s, hd)),
                     rnd(2, (b, kh, s, hd)),
-                    jnp.ones((b, s), jnp.int32),
+                    filled(1, (b, s), jnp.int32),
                 ),
             )
         )
@@ -71,14 +99,56 @@ def _cases(smoke: bool):
         cases.append(
             (
                 "lru_scan",
+                f"b{b}t{t}d{d}",
                 lambda b=b, t=t, d=d: (
-                    0.9 * jnp.ones((b, t, d)),
+                    filled(0.9, (b, t, d)),
                     rnd(1, (b, t, d)),
                     rnd(2, (b, d)),
                 ),
             )
         )
     return cases
+
+
+def _selected(cases, wanted, only):
+    """Filter the grid by --kernel names and --only globs (case ids match as
+    ``kernel`` or ``kernel/label``)."""
+    out = []
+    for name, label, build in cases:
+        if wanted is not None and name not in wanted:
+            continue
+        case_id = f"{name}/{label}"
+        if only and not any(
+            fnmatch.fnmatch(case_id, pat) or fnmatch.fnmatch(name, pat)
+            for pat in only
+        ):
+            continue
+        out.append((name, label, build))
+    return out
+
+
+def _list_grid(cases, db, interpret: bool) -> int:
+    """Print each case with its DB status: exact hit, warm neighbor, or cold."""
+    from repro.kernels.autotuned import get_spec
+    from repro.tuning import make_key
+
+    for name, label, build in cases:
+        call_args = build()
+        spec = get_spec(name)
+        space = spec.space(*call_args)
+        key = make_key(name, args=call_args, space=space,
+                       extra={"interpret": bool(interpret)})
+        rec, exact = db.lookup(key)
+        case_id = f"{name}/{label}"
+        if exact:
+            print(f"  {case_id:<42} HIT   best={rec.point} "
+                  f"cost={rec.cost * 1e3:.2f}ms source={rec.source}")
+        elif rec is not None and key.distance(rec.key) != float("inf"):
+            print(f"  {case_id:<42} warm  neighbor={rec.point} "
+                  f"(shapes {rec.key.shapes()})")
+        else:
+            print(f"  {case_id:<42} cold")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -89,6 +159,14 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true", help="tiny grid + budget (CI lane)")
     ap.add_argument(
         "--kernel", action="append", default=None, help="restrict to kernel(s); repeatable"
+    )
+    ap.add_argument(
+        "--only", action="append", default=None, metavar="GLOB",
+        help="restrict to matching cases, e.g. 'matmul/128*'; repeatable",
+    )
+    ap.add_argument(
+        "--list", action="store_true", dest="list_grid",
+        help="print the registered grid with DB hit status; tune nothing",
     )
     ap.add_argument("--num-opt", type=int, default=3, help="CSA coupled solvers")
     ap.add_argument("--max-iter", type=int, default=None, help="CSA iterations (default 2 smoke / 4)")
@@ -114,11 +192,18 @@ def main(argv=None) -> int:
         print(f"pretune: unknown kernel(s) {sorted(unknown)}", file=sys.stderr)
         return 2
 
+    cases = _selected(
+        _cases(args.smoke, abstract=args.list_grid), wanted, args.only
+    )
+    if not cases:
+        print("pretune: no cases match the given filters", file=sys.stderr)
+        return 2
+    if args.list_grid:
+        return _list_grid(cases, db, interpret=not args.no_interpret)
+
     n_done = 0
     t_all = time.perf_counter()
-    for name, build in _cases(args.smoke):
-        if wanted is not None and name not in wanted:
-            continue
+    for name, label, build in cases:
         call_args = build()
         t0 = time.perf_counter()
         rec = tune_call(
@@ -133,14 +218,13 @@ def main(argv=None) -> int:
             source="pretune",
         )
         dt = time.perf_counter() - t0
-        shapes = [tuple(a.shape) for a in call_args]
         if rec is None:
-            print(f"  {name} {shapes}: every candidate failed; nothing stored ({dt:.1f}s)",
+            print(f"  {name}/{label}: every candidate failed; nothing stored ({dt:.1f}s)",
                   file=sys.stderr)
             continue
         crashed = f" crashed={rec.crashed}" if rec.crashed else ""
         print(
-            f"  {name} {shapes}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
+            f"  {name}/{label}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
             f"evals={rec.evals}{crashed} ({dt:.1f}s)"
         )
         n_done += 1

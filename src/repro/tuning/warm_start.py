@@ -21,6 +21,20 @@ __all__ = ["apply_warm_start", "DEFAULT_BUDGET_FRAC", "DEFAULT_SPREAD"]
 DEFAULT_BUDGET_FRAC = 0.5
 #: normalized-coords radius of the seeded population around the stored point
 DEFAULT_SPREAD = 0.2
+#: cap on the space-resolution-widened spread (never seed near-globally)
+MAX_SPREAD = 0.6
+
+
+def effective_spread(space, spread: float = DEFAULT_SPREAD) -> float:
+    """Widen ``spread`` to at least ~one grid step of the coarsest discrete
+    dimension: on a 6-octave ``LogIntDim`` a 0.2 radius is *sub-step* — the
+    seeded population would collapse onto the stored point and a half-budget
+    re-search could never reach an optimum two octaves away."""
+    try:
+        step = space.resolution()
+    except Exception:
+        return spread
+    return max(spread, min(MAX_SPREAD, 1.1 * step))
 
 
 def apply_warm_start(
@@ -46,7 +60,7 @@ def apply_warm_start(
         z0 = space.encode(record.point)
     except Exception:
         return False  # incompatible point (e.g. renamed dims) → cold start
-    if not optimizer.seed(z0, spread=spread):
+    if not optimizer.seed(z0, spread=effective_spread(space, spread)):
         return False
     if budget_frac < 1.0:
         optimizer.shrink_budget(budget_frac)

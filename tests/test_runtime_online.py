@@ -1,0 +1,722 @@
+"""repro.runtime: online adaptive tuning.
+
+Deterministic throughout — costs come through the cost seam (no wall
+clock), the ε-scheduler is a credit counter (no RNG), and where background
+builds are involved the tests drain the pool between serving calls so
+readiness is reproducible.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CSA,
+    Autotuning,
+    ChoiceDim,
+    ExecutableCache,
+    IntDim,
+    LogIntDim,
+    SearchSpace,
+    TunedStep,
+)
+from repro.runtime import (
+    EXPLOIT,
+    EXPLORE,
+    ContextRouter,
+    DriftDetector,
+    OnlineTuner,
+    bucket_args,
+    pow2_bucket,
+)
+from repro.tuning import TuningDB, make_key
+
+
+def _space(hi=32):
+    return SearchSpace([IntDim("p", 1, hi)])
+
+
+def _at(space=None, num_opt=3, max_iter=4, seed=0, **kw):
+    space = space or _space()
+    return Autotuning(
+        space=space, ignore=0,
+        optimizer=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
+        cache=True, **kw,
+    )
+
+
+def _drive_search(tuner, cost_of, n=500, exploit_cost=None):
+    """Serve requests until the tuner's search finishes; returns decisions."""
+    decisions = []
+    for _ in range(n):
+        if tuner.finished:
+            break
+        d = tuner.begin()
+        decisions.append(d)
+        if d.kind == EXPLORE:
+            tuner.observe(d, cost_of(d.point))
+        else:
+            tuner.observe(d, exploit_cost if exploit_cost is not None
+                          else cost_of(d.point))
+    return decisions
+
+
+# ------------------------------------------------------------ drift detector
+def test_drift_detector_levels_and_rebaseline():
+    dd = DriftDetector(window=4, min_samples=2, factor=1.5, severe_factor=3.0)
+    for _ in range(4):
+        assert dd.observe(1.0) == 0  # baseline fills, no detection yet
+    assert dd.ready
+    assert dd.observe(1.2) == 0  # recent below min_samples
+    assert dd.observe(1.2) == 0  # median 1.2 < 1.5
+    assert dd.observe(2.0) == 0  # median(1.2,1.2,2.0) = 1.2
+    assert dd.observe(2.0) == 1  # median -> 1.6 > 1.5
+    # the trigger cleared the recent window: no immediate re-trigger
+    assert dd.observe(2.0) == 0  # recent below min_samples again
+    # severe drift
+    assert dd.observe(9.0) == 2  # median(2.0, 9.0) = 5.5 > 3.0 x baseline
+    assert [e["level"] for e in dd.events] == [1, 2]
+    assert dd.events[-1]["recent"] == 5.5  # freshest min_samples' median
+    dd.rebaseline()
+    assert not dd.ready
+    assert dd.observed == 0
+
+
+def test_drift_detector_ignores_nonfinite_and_single_spikes():
+    dd = DriftDetector(window=6, min_samples=3, factor=1.5)
+    for _ in range(6):
+        dd.observe(1.0)
+    assert dd.observe(float("inf")) == 0  # crashed request: excluded
+    # a single straggler cannot flip the median
+    assert dd.observe(100.0) == 0
+    assert dd.observe(1.0) == 0
+    assert dd.observe(1.0) == 0
+    assert dd.events == []
+
+
+def test_drift_detector_validates():
+    with pytest.raises(ValueError):
+        DriftDetector(window=0)
+    with pytest.raises(ValueError):
+        DriftDetector(window=4, min_samples=9)
+    with pytest.raises(ValueError):
+        DriftDetector(factor=1.0)
+
+
+# --------------------------------------------------------------- ε schedule
+def test_epsilon_exploration_accounting():
+    """The credit scheduler holds explored/calls <= ε exactly, with explores
+    landing on the deterministic schedule (every 1/ε-th call)."""
+    at = _at(max_iter=10)
+    t = OnlineTuner(at, epsilon=0.25)
+    kinds = []
+    for i in range(40):
+        if t.finished:
+            break
+        d = t.begin()
+        kinds.append(d.kind)
+        t.observe(d, float((d.point["p"] - 9) ** 2) if d.kind == EXPLORE else 1.0)
+    explores = kinds.count(EXPLORE)
+    # every 4th call explores while the search is live
+    assert kinds[:8] == [EXPLOIT, EXPLOIT, EXPLOIT, EXPLORE] * 2
+    assert explores == len(kinds) // 4
+    assert t.stats_["explores"] == explores
+    assert t.stats_["exploits"] == len(kinds) - explores
+    # ... and the search only ever advances on explore calls
+    assert at.num_measurements == explores
+
+
+def test_epsilon_zero_never_explores_and_one_always_does():
+    t0 = OnlineTuner(_at(), epsilon=0.0, default_point={"p": 5})
+    for _ in range(10):
+        d = t0.begin()
+        assert d.kind == EXPLOIT
+        t0.observe(d, 1.0)
+    assert not t0.finished  # replay-only: the search never advances
+
+    t1 = OnlineTuner(_at(), epsilon=1.0)
+    d = t1.begin()
+    assert d.kind == EXPLORE
+
+
+def test_exploit_point_prefers_default_until_measured():
+    t = OnlineTuner(_at(), epsilon=0.25, default_point={"p": 7})
+    d = t.begin()
+    assert d.kind == EXPLOIT and d.point == {"p": 7}
+    # after a measurement the best-known point takes over
+    while True:
+        d = t.begin()
+        if d.kind == EXPLORE:
+            t.observe(d, 0.5)
+            break
+        t.observe(d, 1.0)
+    assert np.isfinite(t.at.best_cost)
+    assert t.exploit_point() == t.at.best_point
+
+
+# ------------------------------------------------------- drift-driven resets
+def test_drift_triggers_warm_reset_and_recommits(tmp_path):
+    """End-to-end episode: converge -> commit -> drift -> warm half-budget
+    re-search with fresh measurements -> recommit with source='online'."""
+    path = str(tmp_path / "db.json")
+    db = TuningDB(path)
+    sp = _space()
+    key = make_key("unit", args=(np.zeros((64, 64), np.float32),), space=sp)
+    at = _at(space=sp, db=db, key=key)
+    t = OnlineTuner(at, epsilon=0.5, drift=DriftDetector(window=4, min_samples=2),
+                    warm_frac=0.5)
+
+    phase1 = {"n": 0}
+
+    def cost1(p):
+        phase1["n"] += 1
+        return (p["p"] - 9) ** 2 * 0.01 + 1.0
+
+    _drive_search(t, cost1, exploit_cost=1.0)
+    assert t.finished
+    assert t.stats_["searches_completed"] == 1
+    rec1 = db.get(key)
+    assert rec1 is not None and rec1.point == {"p": 9}
+
+    # healthy steady state establishes the detector's baseline
+    for _ in range(6):
+        d = t.begin()
+        assert d.kind == EXPLOIT
+        assert t.observe(d, 1.0) == 0
+
+    # environment drifts: exploit costs triple -> detector fires
+    level = 0
+    for _ in range(50):
+        d = t.begin()
+        assert d.kind == EXPLOIT
+        level = t.observe(d, 3.0)
+        if level:
+            break
+    assert level == 1
+    assert t.stats_["drift_resets"] == 1
+    assert not t.finished  # re-entered tuning
+    # the incumbent's fresh cost was noted, so the driver's view is current
+    assert any(p == {"p": 9} and c == 3.0 for p, c in at.history)
+
+    phase2 = {"n": 0}
+
+    def cost2(p):
+        phase2["n"] += 1
+        return (p["p"] - 20) ** 2 * 0.01 + 3.0
+
+    _drive_search(t, cost2, exploit_cost=3.0)
+    assert t.finished
+    assert phase2["n"] > 0  # the re-search measured fresh costs
+    # half budget: the warm re-search spent fewer evaluations than cold
+    assert phase2["n"] < phase1["n"]
+    rec2 = db.get(key)
+    assert rec2 is not None
+    assert rec2.source == "online"
+    assert rec2.cost >= 3.0  # refreshed to post-drift reality
+    assert rec2.point == at.best_point
+
+
+def test_exploit_costs_do_not_feed_drift_while_search_is_live():
+    t = OnlineTuner(_at(), epsilon=0.25,
+                    drift=DriftDetector(window=2, min_samples=1, factor=1.1))
+    for _ in range(6):
+        d = t.begin()
+        assert t.observe(d, 100.0 if d.kind == EXPLOIT else 1.0) == 0
+    assert t.drift.observed == 0  # nothing armed before convergence
+
+
+# ----------------------------------------------- background builds / no-block
+def test_background_builds_never_run_on_serving_thread():
+    main_thread = threading.get_ident()
+    build_threads = []
+
+    def build(point, *args):
+        build_threads.append(threading.get_ident())
+        return ("exe", point["p"])
+
+    cache = ExecutableCache()
+    t = OnlineTuner(_at(), build=build, cache=cache, jobs=2, epsilon=1.0,
+                    default_point={"p": 4})
+    explored_with_exec = 0
+    for _ in range(300):
+        if t.finished:
+            break
+        d = t.begin()
+        if d.kind == EXPLORE:
+            assert d.executable == ("exe", d.point["p"])
+            explored_with_exec += 1
+            t.observe(d, abs(d.point["p"] - 5) + 1.0)
+        else:
+            t.observe(d, 1.0)
+            t.wait_pending()  # deterministic readiness between requests
+    assert t.finished
+    assert explored_with_exec == t.stats_["explores"] > 0
+    assert t.stats_["inband_builds"] == 0
+    assert build_threads and all(th != main_thread for th in build_threads)
+    assert cache.stats()["recompiles"] == 0
+
+
+def test_scheduled_explore_defers_while_compile_in_flight():
+    import time as _time
+
+    def slow_build(point, *args):
+        _time.sleep(0.05)
+        return ("exe", point["p"])
+
+    t = OnlineTuner(_at(), build=slow_build, cache=ExecutableCache(), jobs=1,
+                    epsilon=1.0, default_point={"p": 4})
+    d = t.begin()  # wants to explore; the build was only just submitted
+    assert d.kind == EXPLOIT
+    assert t.stats_["deferred_explores"] == 1
+    t.observe(d, 1.0)
+    t.wait_pending()
+    d = t.begin()  # ready now
+    assert d.kind == EXPLORE and d.executable is not None
+
+
+def test_failed_candidate_builds_absorbed_without_serving_requests():
+    fails = {2, 3}
+
+    def build(point, *args):
+        if point["p"] in fails:
+            raise RuntimeError("illegal block config for this shape")
+        return ("exe", point["p"])
+
+    t = OnlineTuner(_at(space=_space(hi=8)), build=build, cache=ExecutableCache(),
+                    jobs=1, epsilon=1.0, default_point={"p": 4})
+    explored = set()
+    for _ in range(300):
+        if t.finished:
+            break
+        d = t.begin()
+        t.wait_pending()
+        if d.kind == EXPLORE:
+            explored.add(d.point["p"])
+            t.observe(d, abs(d.point["p"] - 5) + 1.0)
+        else:
+            t.observe(d, 1.0)
+    assert t.finished
+    assert not (explored & fails)  # never served at a failed candidate
+    assert t.stats_["candidate_failures"] > 0
+    crashed = {p["p"] for p, c in t.at.history if not np.isfinite(c)}
+    assert crashed and crashed <= fails
+
+
+def test_one_off_shapes_never_trigger_background_builds():
+    """Admission control: long-tail exact shapes (each request a new seq
+    len) are served by fallback dispatch — no AOT compile per request."""
+    built = []
+
+    def build(point, *args):
+        built.append(tuple(args[0].shape))
+        return "exe"
+
+    t = OnlineTuner(_at(), build=build, jobs=1, epsilon=1.0, default_point={"p": 4})
+    for n in range(20):
+        d = t.begin(np.zeros((100 + n, 8), np.float32))  # every shape unique
+        t.observe(d, 1.0)
+        t.wait_pending()
+    assert built == []
+    assert t.stats_["compiles_submitted"] == 0
+    # ... while a shape that returns earns its builds from the second sight
+    x = np.zeros((64, 8), np.float32)
+    d = t.begin(x)
+    t.wait_pending()
+    assert built == []  # first sight: still fallback-served
+    t.observe(d, 1.0)
+    d = t.begin(x)
+    t.wait_pending()
+    assert built  # second sight admitted the compile
+
+
+def test_transient_build_failure_is_retried_not_poisoned():
+    """The default cache never memoizes failures: a transient compile error
+    (RESOURCE_EXHAUSTED under load) must not disqualify the candidate for
+    the process lifetime — a revisit rebuilds."""
+    calls = {"n": 0}
+
+    def build(point, *args):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient resource exhaustion")
+        return "ok"
+
+    t = OnlineTuner(_at(), build=build, jobs=1, epsilon=1.0)
+    pt = {"p": 5}
+    assert t.executable_for(pt) is None  # build submitted
+    t.wait_pending()
+    assert t.executable_for(pt) is None  # failed -> memo dropped, resubmitted
+    t.wait_pending()
+    assert t.executable_for(pt) == "ok"  # the retry succeeded
+    assert calls["n"] == 2
+
+
+def test_kernel_router_rejects_conflicting_singleton_config():
+    from repro.kernels.autotuned import kernel_router
+
+    r1 = kernel_router(interpret=True, epsilon=0.1)
+    assert kernel_router(interpret=True) is r1  # default args: same singleton
+    with pytest.raises(ValueError):
+        kernel_router(interpret=True, epsilon=0.5)
+    with pytest.raises(ValueError):
+        kernel_router(interpret=True, db=TuningDB(None))
+    assert kernel_router(interpret=True, epsilon=0.5, fresh=True) is not r1
+
+
+def test_prewarm_and_executable_for():
+    built = []
+
+    def build(point, *args):
+        built.append(point["p"])
+        return ("exe", point["p"])
+
+    t = OnlineTuner(_at(space=_space(hi=4)), build=build, cache=ExecutableCache(),
+                    jobs=2, epsilon=0.5)
+    t.prewarm([{"p": k} for k in (1, 2, 3, 4)], wait=True)
+    assert sorted(built) == [1, 2, 3, 4]
+    assert t.executable_for({"p": 3}) == ("exe", 3)
+    d = t.begin()
+    assert d.executable is not None  # whatever it picked was prewarmed
+
+
+# --------------------------------------------------------------- the router
+def test_pow2_bucket_and_bucket_args():
+    assert [pow2_bucket(n) for n in (1, 2, 3, 48, 64, 65, 1000)] == [
+        1, 2, 4, 64, 64, 128, 1024]
+    args, kwargs = bucket_args(
+        (np.zeros((60, 17), np.float32), 3), {"v": np.zeros((5,), np.int32)}
+    )
+    assert args[0].shape == (64, 32) and args[1] == 3
+    assert kwargs["v"].shape == (8,)
+
+
+def test_router_buckets_nearby_shapes_into_one_context():
+    r = ContextRouter(db=TuningDB(None))
+    r.register("k", space=lambda x: _space(), defaults=lambda x: {"p": 4})
+    t60 = r.tuner("k", np.zeros((60, 16), np.float32))
+    t64 = r.tuner("k", np.zeros((64, 16), np.float32))
+    t65 = r.tuner("k", np.zeros((65, 16), np.float32))
+    assert t60 is t64  # both bucket to (64, 16)
+    assert t64 is not t65  # 65 -> 128
+    assert len(r.contexts()) == 2
+
+
+def test_router_space_comes_from_bucketed_shapes():
+    """Exact shapes in one bucket must share a single context whose knob
+    domain is derived from the bucket — not from whichever exact shape
+    arrived first — so pretuned pow2 records exact-hit non-pow2 traffic."""
+    seen_shapes = []
+
+    def space(x):
+        seen_shapes.append(tuple(x.shape))
+        return SearchSpace([LogIntDim("t", 8, int(x.shape[0]))])
+
+    r = ContextRouter(db=TuningDB(None))
+    r.register("k", space=space)
+    t1000 = r.tuner("k", np.zeros((1000, 16), np.float32))
+    t1024 = r.tuner("k", np.zeros((1024, 16), np.float32))
+    assert t1000 is t1024
+    # the space saw the bucketed 1024, never the exact 1000
+    assert (1024, 16) in seen_shapes and (1000, 16) not in seen_shapes
+    k_a = r.context_key("k", (np.zeros((1000, 16), np.float32),))
+    k_b = r.context_key("k", (np.zeros((1024, 16), np.float32),))
+    assert k_a.encode() == k_b.encode()
+
+
+def test_router_separates_contexts_by_extra_and_dtype():
+    r = ContextRouter(db=TuningDB(None))
+    r.register("k", space=lambda x: _space())
+    x = np.zeros((64, 16), np.float32)
+    assert r.tuner("k", x, extra={"batch": 8}) is not r.tuner("k", x, extra={"batch": 16})
+    assert r.tuner("k", x) is not r.tuner("k", x.astype(np.float16))
+
+
+def test_router_observe_routes_to_owning_tuner():
+    r = ContextRouter(db=TuningDB(None))
+    r.register("k", space=lambda x: _space(), epsilon=1.0)
+    a = np.zeros((64, 16), np.float32)
+    b = np.zeros((256, 16), np.float32)
+    da = r.begin("k", a)
+    db_ = r.begin("k", b)
+    r.observe(da, 1.0)
+    r.observe(db_, 2.0)
+    assert r.tuner("k", a).stats_["calls"] == 1
+    assert r.tuner("k", b).stats_["calls"] == 1
+    assert r.stats()["calls"] == 2
+
+
+def test_router_new_context_warm_starts_from_committed_neighbor():
+    db = TuningDB(None)
+    r = ContextRouter(db=db)
+    r.register("k", space=lambda x: _space(), epsilon=1.0, max_iter=4)
+    a = np.zeros((64, 16), np.float32)
+    for _ in range(100):
+        t = r.tuner("k", a)
+        if t.finished:
+            break
+        d = r.begin("k", a)
+        r.observe(d, (d.point["p"] - 9) ** 2 * 0.01 + 1.0)
+    assert r.tuner("k", a).finished
+    assert len(db) == 1
+    # a new shape bucket opens warm-started from the committed neighbor
+    t_new = r.tuner("k", np.zeros((256, 16), np.float32))
+    assert t_new.at.warm_started
+    assert not t_new.finished  # near miss, not an exact hit
+
+
+def test_router_exact_hit_serves_stored_best_from_first_request():
+    db = TuningDB(None)
+    r1 = ContextRouter(db=db)
+    r1.register("k", space=lambda x: _space(), epsilon=1.0, max_iter=4)
+    a = np.zeros((64, 16), np.float32)
+    for _ in range(100):
+        if r1.tuner("k", a).finished:
+            break
+        d = r1.begin("k", a)
+        r1.observe(d, (d.point["p"] - 9) ** 2 * 0.01 + 1.0)
+    best = r1.tuner("k", a).best_point
+
+    r2 = ContextRouter(db=db)  # "second process"
+    r2.register("k", space=lambda x: _space(), epsilon=1.0, max_iter=4)
+    d = r2.begin("k", a)
+    assert d.kind == EXPLOIT and d.point == best
+    assert r2.tuner("k", a).finished
+
+
+def test_router_rejects_unknown_route_and_detached_decision():
+    r = ContextRouter(db=TuningDB(None))
+    with pytest.raises(KeyError):
+        r.begin("nope", np.zeros((4,), np.float32))
+    from repro.runtime import Decision
+
+    with pytest.raises(ValueError):
+        r.observe(Decision(EXPLOIT, {"p": 1}), 1.0)
+
+
+# ---------------------------------------------- Autotuning reset x DB seams
+def test_level1_reset_after_commit_remeasures(tmp_path):
+    """Satellite: a level-1 reset after a committed record must re-measure,
+    not replay the cost cache."""
+    db = TuningDB(str(tmp_path / "db.json"))
+    sp = _space()
+    key = make_key("unit", args=(np.zeros((64, 64), np.float32),), space=sp)
+    at = _at(space=sp, db=db, key=key)
+
+    calls1 = {"n": 0}
+
+    def cost1(p):
+        calls1["n"] += 1
+        return (p - 9) ** 2
+
+    at.entire_exec(cost1)
+    assert db.get(key) is not None
+    visited_before = {p["p"] for p, _ in at.history}
+
+    at.reset(1)
+    assert not at.finished
+    assert at.history == []  # stale-environment measurements dropped
+    calls2 = {"n": 0}
+
+    def cost2(p):
+        calls2["n"] += 1
+        return (p - 9) ** 2 + 2.0
+
+    at.entire_exec(cost2)
+    # revisited candidates were re-measured, not answered from the cache
+    assert calls2["n"] > 0
+    revisited = {p["p"] for p, _ in at.history} & visited_before
+    assert revisited  # level 1 keeps the best coordinates -> overlap exists
+    assert all(c >= 2.0 for _, c in at.history)  # every cost is fresh
+
+
+def test_commit_does_not_clobber_better_unvisited_record(tmp_path):
+    """Satellite: a worse drifted re-search must not overwrite a strictly
+    better stored record whose point it never re-measured."""
+    db = TuningDB(str(tmp_path / "db.json"))
+    sp = _space(hi=1000)
+    key = make_key("unit", args=(np.zeros((64, 64), np.float32),), space=sp)
+    from repro.tuning import TuningRecord
+
+    db.put(TuningRecord(key=key, point={"p": 9}, cost=0.001, source="pretune"))
+
+    at = _at(space=sp, db=db, key=key, warm_start=False, num_opt=3, max_iter=2)
+    at.entire_exec(lambda p: 1.0 + abs(p - 500))
+    # seed 0 on this space never lands on p=9 (pinned by the determinism of
+    # CSA's RNG stream); re-check so a future optimizer change fails loudly
+    assert not at._visited({"p": 9})
+    rec = db.get(key)
+    assert rec.point == {"p": 9} and rec.cost == 0.001  # stored best kept
+    assert at._committed  # idempotent: the run will not retry the write
+
+
+def test_commit_refreshes_record_when_stored_point_remeasured(tmp_path):
+    """...but a run that DID re-measure the stored point always commits —
+    that is a refresh under current conditions, not a clobber."""
+    db = TuningDB(str(tmp_path / "db.json"))
+    sp = _space()
+    key = make_key("unit", args=(np.zeros((64, 64), np.float32),), space=sp)
+    from repro.tuning import TuningRecord
+
+    db.put(TuningRecord(key=key, point={"p": 9}, cost=0.001, source="pretune"))
+
+    at = _at(space=sp, db=db, key=key, warm_start=False, num_opt=3, max_iter=2)
+    while not at.finished:
+        at.exec(1.0 + abs(at.point["p"] - 20))
+        if at.finished:
+            break
+    at._committed = False  # simulate: commit raced before the note landed
+    at.note({"p": 9}, 5.0)  # fresh measurement of the stored point
+    assert at.commit()
+    rec = db.get(key)
+    assert rec.cost >= 1.0  # refreshed to current-environment reality
+    assert rec.point == at.best_point
+
+
+def test_note_validates_and_feeds_best():
+    at = _at()
+    with pytest.raises(ValueError):
+        at.note({"wrong": 1}, 1.0)
+    at.note({"p": 3}, 0.25)
+    assert at.best_point == {"p": 3}
+    assert at.best_cost == 0.25
+
+
+def test_skip_bypasses_ignore_stabilization():
+    at = Autotuning(space=_space(), ignore=2,
+                    optimizer=CSA(1, num_opt=3, max_iter=2, seed=0), cache=True)
+    before = at.point
+    at.skip()  # one call, no ignore rounds burned
+    assert at.num_evals == 1
+    assert at.history[0] == (before, np.inf)
+
+
+def test_warm_reset_seeds_and_halves_budget():
+    at = _at(max_iter=8)
+    at.entire_exec(lambda p: (p - 9) ** 2)
+    evals_cold = at.num_evals
+    at.reset(1, warm_point={"p": 9}, budget_frac=0.5)
+    n = {"n": 0}
+
+    def cost(p):
+        n["n"] += 1
+        return (p - 9) ** 2 + 1.0
+
+    at.entire_exec(cost)
+    assert n["n"] > 0
+    assert n["n"] <= evals_cold // 2 + 1
+    assert at.best_point == {"p": 9}
+
+
+# -------------------------------------------------------- TunedStep adaptive
+def test_tuned_step_adaptive_mode_wiring():
+    calls = []
+
+    def factory(mb=1):
+        def step(x):
+            calls.append(mb)
+            return x + mb
+
+        return step
+
+    space = SearchSpace([ChoiceDim("mb", (1, 2, 4))])
+    ts = TunedStep(factory, space, ignore=0, num_opt=2, max_iter=2,
+                   runtime="adaptive", epsilon=1.0,
+                   drift={"window": 4, "min_samples": 2})
+    assert ts.online is not None
+    x = np.zeros((2,))
+    for _ in range(30):
+        x = ts(x)
+        if ts.finished:
+            break
+    assert ts.finished
+    assert ts.best_knobs["mb"] in (1, 2, 4)
+    assert ts.online.stats_["explores"] > 0
+    assert ts.drift_events == []
+
+    with pytest.raises(ValueError):
+        TunedStep(factory, space, runtime="bogus")
+
+
+# ----------------------------------------------------------- kernel routing
+def test_routed_kernel_dispatch_matches_reference():
+    import jax
+
+    from repro.kernels import ref
+    from repro.kernels.autotuned import kernel_router, routed
+
+    router = kernel_router(interpret=True, db=TuningDB(None), epsilon=0.0,
+                           fresh=True)
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    out = routed("matmul", a, b, router=router, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul_ref(a, b)), atol=1e-4
+    )
+    st = router.stats()
+    assert st["contexts"] == 1 and st["calls"] == 1
+    assert st["inband_builds"] == 0
+
+
+# ------------------------------------------------------------- serve replay
+def test_serve_no_tune_replays_stored_decode_k(tmp_path):
+    """Satellite: --no-tune --db must replay the stored-best decode k."""
+    from repro.launch.serve import DECODE_KS, replay_decode_k
+    from repro.tuning import TuningRecord
+
+    space = SearchSpace([ChoiceDim("k", DECODE_KS)])
+    db = TuningDB(str(tmp_path / "serve.json"))
+    key = make_key("serve/decode_k", space=space,
+                   extra={"arch": "qwen2_7b", "tiny": True, "batch": 8})
+    assert replay_decode_k(db, key, gen=64) == 1  # no record: untuned default
+    db.put(TuningRecord(key=key, point={"k": 8}, cost=0.001))
+    assert replay_decode_k(db, key, gen=64) == 8
+    assert replay_decode_k(db, key, gen=4) == 4  # clamped to the stream
+    other = make_key("serve/decode_k", space=space,
+                     extra={"arch": "qwen2_7b", "tiny": True, "batch": 16})
+    assert replay_decode_k(db, other, gen=64) == 1  # per-batch-size context
+
+
+# ------------------------------------------------------------ pretune CLI
+def test_pretune_list_and_only(tmp_path, capsys):
+    from repro.tuning.pretune import main as pretune_main
+
+    db_path = str(tmp_path / "db.json")
+    rc = pretune_main(["--db", db_path, "--smoke", "--list"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "matmul/64x64x64" in out and "lru_scan/b2t64d32" in out
+    assert "cold" in out
+
+    rc = pretune_main(["--db", db_path, "--smoke", "--list", "--only", "matmul/64*"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "matmul/64x64x64" in out
+    assert "matmul/128x128x128" not in out and "lru_scan" not in out
+
+    rc = pretune_main(["--db", db_path, "--smoke", "--list", "--only", "nomatch*"])
+    assert rc == 2
+
+    # committed snapshot shows up as HIT on the next --list
+    snap = "tuned/cpu.json"
+    import os
+
+    if os.path.exists(snap):
+        rc = pretune_main(["--db", snap, "--smoke", "--list", "--only", "matmul*"])
+        assert rc == 0
+        assert "HIT" in capsys.readouterr().out
+
+
+@pytest.mark.slow
+def test_pretune_only_tunes_single_case(tmp_path):
+    from repro.tuning.pretune import main as pretune_main
+    from repro.tuning import TuningDB as DB
+
+    db_path = str(tmp_path / "db.json")
+    rc = pretune_main([
+        "--db", db_path, "--smoke", "--only", "matmul/64*",
+        "--num-opt", "2", "--max-iter", "1",
+    ])
+    assert rc == 0
+    db = DB(db_path)
+    assert len(db) == 1
+    assert db.records()[0].key.name == "matmul"
