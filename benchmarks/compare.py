@@ -1,0 +1,108 @@
+"""Diff a smoke-bench result against the committed baseline.
+
+    python benchmarks/compare.py --baseline benchmarks/baseline_cpu.json \
+        --current BENCH_ci.json --out BENCH_diff.json [--strict]
+
+CI's ``bench-smoke`` lane runs this after every smoke sweep so the perf
+trajectory is *compared*, not just archived.  The gate is warn-only by
+default: drifted metrics are listed (and written to ``--out`` as a
+machine-readable diff artifact) but the exit code stays 0 unless
+``--strict`` promotes the gate to a hard failure.
+
+What is compared, per benchmark present in both files:
+
+* ``status`` — any transition (ok/skipped/failed) is flagged.
+* boolean / parity metrics (``best_match``, ``false_culls``...) — exact.
+* numeric metrics — relative drift beyond ``--tolerance`` (default 0.5,
+  i.e. ±50%) is flagged.  Keys carrying raw wall-clock seconds (suffix
+  ``_s``, ``wall``...) are skipped: they measure the runner, not the code.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+def _is_machine_time(key: str) -> bool:
+    """Keys carrying raw host seconds (ratios and counts are kept)."""
+    return key.endswith("_s") or key.endswith("_secs") or key == "wall"
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> list:
+    """Return a list of diff entries; ``flagged`` entries exceed the gate."""
+    base_by = {r["bench"]: r for r in baseline.get("results", [])}
+    cur_by = {r["bench"]: r for r in current.get("results", [])}
+    diffs = []
+    for bench, base in sorted(base_by.items()):
+        cur = cur_by.get(bench)
+        if cur is None:
+            diffs.append({"bench": bench, "key": "status", "base": base.get("status"),
+                          "current": "missing", "flagged": True})
+            continue
+        if base.get("status") != cur.get("status"):
+            # any status transition is news: ok->failed is a regression,
+            # skipped->failed is a benchmark starting to crash, and
+            # failed->ok / skipped->ok means the baseline wants refreshing
+            diffs.append({"bench": bench, "key": "status",
+                          "base": base.get("status"),
+                          "current": cur.get("status"), "flagged": True})
+            continue
+        bres, cres = base.get("result") or {}, cur.get("result") or {}
+        for key in sorted(set(bres) & set(cres)):
+            bv, cv = bres[key], cres[key]
+            if isinstance(bv, bool) or isinstance(cv, bool) or isinstance(bv, str):
+                if bv != cv:
+                    diffs.append({"bench": bench, "key": key, "base": bv,
+                                  "current": cv, "flagged": True})
+                continue
+            if not isinstance(bv, (int, float)) or not isinstance(cv, (int, float)):
+                continue
+            if _is_machine_time(key):
+                continue
+            denom = max(abs(float(bv)), 1e-12)
+            rel = (float(cv) - float(bv)) / denom
+            if abs(rel) > tolerance:
+                diffs.append({"bench": bench, "key": key, "base": bv,
+                              "current": cv, "rel": round(rel, 3), "flagged": True})
+    return diffs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.compare")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--current", required=True, help="fresh smoke-bench JSON")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="relative drift allowed on numeric metrics (default 0.5)")
+    ap.add_argument("--out", default=None, help="write the diff JSON here")
+    ap.add_argument("--strict", action="store_true",
+                    help="promote the warn gate: exit 1 on any flagged drift")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    diffs = compare(baseline, current, args.tolerance)
+    flagged = [d for d in diffs if d.get("flagged")]
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"tolerance": args.tolerance, "flagged": len(flagged),
+                       "diffs": diffs}, f, indent=1)
+        print(f"wrote {args.out}")
+    if not flagged:
+        print(f"bench-compare: OK — no metric drifted beyond ±{args.tolerance:.0%}")
+        return 0
+    print(f"bench-compare: {len(flagged)} metric(s) drifted beyond "
+          f"±{args.tolerance:.0%} of {args.baseline}:")
+    for d in flagged:
+        rel = f" ({d['rel']:+.0%})" if "rel" in d else ""
+        print(f"  {d['bench']}.{d['key']}: {d['base']} -> {d['current']}{rel}")
+    if args.strict:
+        return 1
+    print("bench-compare: warn-only gate — not failing the lane")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,200 @@
+"""Measurement-overhead benchmark: what adaptive racing buys per search.
+
+Runs the *same* PATSMA search (same space, optimizer, seed) under the two
+measurement policies on a deterministic cost model — a synthetic kernel
+whose per-repetition "wall time" is its true cost plus a tiny seeded jitter,
+so every number here is reproducible and machine-independent:
+
+  * ``fixed``    — the classic schedule: every candidate pays
+    ``warmup=1 + repeats=3`` repetitions, cost is the 3-rep median.
+  * ``adaptive`` — the :class:`repro.core.measure.MeasureEngine`: one rep
+    per candidate, dominated candidates culled against the round best,
+    survivors escalating the 1→3→7 ladder, plus the roofline prefilter
+    (analytic bound = 0.9 × true cost) skipping hopeless candidates.
+
+Reported: total repetitions spent (the acceptance gate: adaptive ≤ 50% of
+fixed), the simulated wall-clock ratio, best-point parity, cull/prune
+counts, and the number of *false culls* — candidates raced out whose true
+cost is within the calibrated noise floor of the winner (must be zero).
+
+Prints ``measurement_overhead_*,us,...`` CSV lines for the CI artifact.
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+BASE_S = 1e-3  # true cost scale (1 ms)
+JITTER = 1e-3  # per-rep relative jitter amplitude (well inside rel_noise)
+
+
+def _space():
+    from repro.core import LogIntDim, SearchSpace
+
+    return SearchSpace([LogIntDim("t1", 4, 64), LogIntDim("t2", 16, 256)])
+
+
+def true_cost(point: dict) -> float:
+    """Smooth bowl with its minimum at (t1=16, t2=64); distinct costs at
+    every grid point, gaps far larger than the jitter."""
+    t1, t2 = point["t1"], point["t2"]
+    return BASE_S * (
+        1.0 + (math.log2(t1 / 16.0)) ** 2 + (math.log2(t2 / 64.0)) ** 2
+    )
+
+
+def _jitter(point: dict, rep_idx: int) -> float:
+    """Deterministic pseudo-jitter in [-1, 1] keyed by (point, rep index)."""
+    k = (point["t1"] * 1009 + point["t2"]) & 0xFFFFFFFF
+    v = (k * 2654435761 + rep_idx * 40503 + 12345) & 0xFFFFFFFF
+    return (v / 0xFFFFFFFF) * 2.0 - 1.0
+
+
+class _CostModel:
+    """Counts every simulated repetition and its simulated wall time."""
+
+    def __init__(self) -> None:
+        self.reps = 0
+        self.wall_s = 0.0
+        self._idx: dict = {}  # point key -> next rep index
+
+    def observe(self, point: dict) -> float:
+        key = (point["t1"], point["t2"])
+        i = self._idx.get(key, 0)
+        self._idx[key] = i + 1
+        t = true_cost(point) * (1.0 + JITTER * _jitter(point, i))
+        self.reps += 1
+        self.wall_s += t
+        return t
+
+    def rep_fn(self, point: dict):
+        return lambda: self.observe(point)
+
+
+def _driver(seed: int, num_opt: int, max_iter: int):
+    from repro.core import CSA, Autotuning
+
+    space = _space()
+    return Autotuning(
+        space=space,
+        ignore=0,
+        optimizer=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
+        cache=True,
+    )
+
+
+def run_fixed(seed=0, num_opt=5, max_iter=6, warmup=1, repeats=3):
+    from repro.core import MeasureEngine, MeasurePolicy
+
+    model = _CostModel()
+    engine = MeasureEngine(
+        MeasurePolicy(mode="fixed", warmup=warmup, repeats=repeats)
+    )
+    at = _driver(seed, num_opt, max_iter)
+
+    def measure_batch(points):
+        return engine.measure_round([model.rep_fn(p) for p in points])
+
+    at.entire_exec_batch(measure_batch)
+    return at, model, engine
+
+
+def run_adaptive(seed=0, num_opt=5, max_iter=6, warmup=1, roofline=True):
+    from repro.core import MeasureEngine, MeasurePolicy
+
+    model = _CostModel()
+    engine = MeasureEngine(MeasurePolicy(mode="adaptive", warmup=warmup))
+    at = _driver(seed, num_opt, max_iter)
+
+    def measure_batch(points):
+        reps = [model.rep_fn(p) for p in points]
+        # analytic lower bound: 90% of the true cost (a roofline is always
+        # an underestimate of the real wall time)
+        bounds = [0.9 * true_cost(p) for p in points] if roofline else None
+        return engine.measure_round(reps, bounds=bounds)
+
+    at.entire_exec_batch(measure_batch)
+    return at, model, engine
+
+
+def _false_culls(at, engine) -> int:
+    """Culled candidates whose *true* cost sits within the calibrated noise
+    floor of the winner — racing must never kill those."""
+    noise = engine._noise()
+    best_true = true_cost(at.best_point)
+    floor = noise.floor(best_true)
+    bad = 0
+    seen = set()
+    for p, _ in at.history:
+        k = tuple(sorted(p.items()))
+        if k in seen:
+            continue
+        seen.add(k)
+        meta = at.measurement_meta(p)
+        if meta and meta.get("culled") and true_cost(p) - best_true <= floor:
+            bad += 1
+    return bad
+
+
+def run(seed=0, num_opt=5, max_iter=6, verbose=True) -> dict:
+    at_f, model_f, eng_f = run_fixed(seed=seed, num_opt=num_opt, max_iter=max_iter)
+    at_a, model_a, eng_a = run_adaptive(seed=seed, num_opt=num_opt, max_iter=max_iter)
+
+    res = {
+        "reps_fixed": model_f.reps,
+        "reps_adaptive": model_a.reps,
+        "reps_ratio": model_a.reps / max(model_f.reps, 1),
+        "wall_fixed_s": model_f.wall_s,
+        "wall_adaptive_s": model_a.wall_s,
+        "wall_ratio": model_a.wall_s / max(model_f.wall_s, 1e-12),
+        "best_match": at_a.best_point == at_f.best_point,
+        "best_point": str(at_a.best_point),
+        "culled": eng_a.stats["culled"],
+        "pruned_roofline": eng_a.stats["pruned_roofline"],
+        "candidates_fixed": eng_f.stats["candidates"],
+        "candidates_adaptive": eng_a.stats["candidates"],
+        "false_culls": _false_culls(at_a, eng_a),
+    }
+    if verbose:
+        print(
+            f"measurement_overhead: reps {model_a.reps} vs {model_f.reps} "
+            f"(ratio {res['reps_ratio']:.2f}) | wall {model_a.wall_s * 1e3:.2f}ms vs "
+            f"{model_f.wall_s * 1e3:.2f}ms (ratio {res['wall_ratio']:.2f}) | "
+            f"best match: {res['best_match']} ({at_a.best_point}) | "
+            f"{res['culled']} culled, {res['pruned_roofline']} roofline-pruned, "
+            f"{res['false_culls']} false culls"
+        )
+    return res
+
+
+def _print_csv(out: dict) -> None:
+    print(
+        f"measurement_overhead_adaptive,{out['wall_adaptive_s'] * 1e6:.0f},"
+        f"reps_ratio={out['reps_ratio']:.2f};wall_ratio={out['wall_ratio']:.2f}"
+    )
+    print(
+        f"measurement_overhead_parity,0,best_match={out['best_match']}"
+        f";false_culls={out['false_culls']};culled={out['culled']}"
+        f";pruned={out['pruned_roofline']}"
+    )
+
+
+def smoke():
+    out = run(seed=0, num_opt=5, max_iter=4, verbose=True)
+    _print_csv(out)
+    return out
+
+
+def main(argv=None):
+    out = run(seed=0, num_opt=5, max_iter=8, verbose=True)
+    _print_csv(out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,11 @@ Three comparisons:
     executable cache with **zero recompiles**; the sequential path re-pays
     every trace+compile.  This is the headline ``≤ 0.5x`` number.
 
+Every ``tune_call`` here pins ``measure="fixed"``: this benchmark isolates
+the *batching/compile* layers against the fixed-repeat sequential reference,
+so the adaptive measurement engine (benchmarked separately in
+``measurement_overhead``) must not change the repetition schedule under it.
+
 Prints ``tuning_throughput_{mode},us,...`` CSV lines for the CI artifact.
 """
 from __future__ import annotations
@@ -129,7 +134,8 @@ def _parity_check(num_opt, max_iter, jobs):
         return float(np.asarray(ex(*args)))
 
     rec_b = tune_call("_throughput_probe", x, db=TuningDB(None), interpret=True,
-                      num_opt=num_opt, max_iter=max_iter, jobs=jobs, cost_fn=det_cost)
+                      num_opt=num_opt, max_iter=max_iter, jobs=jobs, cost_fn=det_cost,
+                      measure="fixed")
     rec_s = sequential_tune("_throughput_probe", x, db=TuningDB(None),
                             num_opt=num_opt, max_iter=max_iter, cost_fn=det_cost)
     ok = rec_b is not None and rec_s is not None and rec_b.point == rec_s.point
@@ -147,7 +153,7 @@ def run(n_ctx=2, num_opt=4, max_iter=3, jobs=None, verbose=True) -> dict:
     # jax/pallas warmup so neither timed pass pays backend initialization
     name0, args0 = ctxs[0]
     tune_call(name0, *args0, db=TuningDB(None), interpret=True, num_opt=2,
-              max_iter=1, jobs=jobs)
+              max_iter=1, jobs=jobs, measure="fixed")
     cache.clear()
 
     best_match, probe_point = _parity_check(num_opt, max_iter, jobs)
@@ -158,7 +164,7 @@ def run(n_ctx=2, num_opt=4, max_iter=3, jobs=None, verbose=True) -> dict:
     t0 = time.perf_counter()
     recs_b = [
         tune_call(name, *args, db=db_b, interpret=True, num_opt=num_opt,
-                  max_iter=max_iter, jobs=jobs)
+                  max_iter=max_iter, jobs=jobs, measure="fixed")
         for name, args in ctxs
     ]
     batched_cold_s = time.perf_counter() - t0
@@ -170,7 +176,7 @@ def run(n_ctx=2, num_opt=4, max_iter=3, jobs=None, verbose=True) -> dict:
     t0 = time.perf_counter()
     recs_r = [
         tune_call(name, *args, db=db_r, interpret=True, num_opt=num_opt,
-                  max_iter=max_iter, jobs=jobs)
+                  max_iter=max_iter, jobs=jobs, measure="fixed")
         for name, args in ctxs
     ]
     batched_retune_s = time.perf_counter() - t0

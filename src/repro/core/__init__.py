@@ -18,6 +18,14 @@ from .costs import (
 )
 from .csa import CSA
 from .grid_random import GridSearch, RandomSearch
+from .measure import (
+    MeasureEngine,
+    MeasurePolicy,
+    MeasureResult,
+    NoiseEstimate,
+    resolve_measure_policy,
+    time_rep,
+)
 from .nelder_mead import NelderMead
 from .optimizer import NumericalOptimizer
 from .space import ChoiceDim, FloatDim, IntDim, LogIntDim, SearchSpace
@@ -37,6 +45,12 @@ __all__ = [
     "ChoiceDim",
     "TunedStep",
     "RuntimeCost",
+    "MeasurePolicy",
+    "MeasureResult",
+    "MeasureEngine",
+    "NoiseEstimate",
+    "resolve_measure_policy",
+    "time_rep",
     "ExecutableCache",
     "aot_compile",
     "compile_fanout",

@@ -54,6 +54,15 @@ def _block(x):
         return x
 
 
+def _known_std(record) -> Optional[float]:
+    """A record's measured standard deviation, or ``None`` when it carries no
+    *meaningful* confidence — absent fields (pre-engine records) and
+    single-rep measurements (whose std of 0.0 is unknown, not perfect)."""
+    if record.cost_std is None or (record.repeats_spent or 0) <= 1:
+        return None
+    return float(record.cost_std)
+
+
 class Autotuning:
     """Paper API::
 
@@ -107,6 +116,7 @@ class Autotuning:
         self._evals = 0  # completed cost evaluations fed to the optimizer
         self._measurements = 0  # target iterations spent on tuning (incl. ignored)
         self._history: list = []  # (point_dict, cost)
+        self._measure_meta: dict = {}  # space.key -> measurement bookkeeping
         # persistent tuning store (repro.tuning): exact hit / warm seed
         self.db = db
         self.key = key
@@ -205,6 +215,24 @@ class Autotuning:
     def history(self) -> list:
         return list(self._history)
 
+    def measurement_meta(self, point: Optional[dict] = None) -> Optional[dict]:
+        """Measurement bookkeeping for ``point`` (default: the best point):
+        ``{"cost_std", "repeats_spent", "culled", "pruned"}`` when the
+        adaptive measurement engine (or a rich ``measure_batch``) delivered a
+        :class:`~repro.core.measure.MeasureResult` for it; ``None`` for
+        plain-float costs, DB hits, and points this run never measured.  A
+        ``pruned="roofline"`` entry marks a candidate that was charged its
+        analytic bound without a single repetition — cleared (so the point is
+        re-measured) by ``reset(level >= 1)``."""
+        if point is None:
+            point = self.best_point
+        try:
+            k = self.space.key({n: point[n] for n in self.space.names})
+        except Exception:
+            return None
+        meta = self._measure_meta.get(k)
+        return dict(meta) if meta is not None else None
+
     def reset(
         self,
         level: int = 0,
@@ -233,6 +261,10 @@ class Autotuning:
         self._cost_cache.clear()
         if level >= 1:
             self._history.clear()
+            # measurement bookkeeping is pre-drift data too: in particular a
+            # roofline-pruned candidate (charged its analytic bound, never
+            # run) must be eligible for a real measurement in the re-search
+            self._measure_meta.clear()
         # a reset means the environment drifted: re-enter real tuning even if
         # this run was answered from the DB, and allow a fresh commit
         self._db_hit = None
@@ -356,8 +388,12 @@ class Autotuning:
         elsewhere), the stored record is kept.  A run that did re-measure
         the stored point always wins — its best already accounts for that
         point under current conditions, so committing it is a refresh, not a
-        clobber.  ``force=True`` bypasses the guard.  Returns True iff a
-        record was written."""
+        clobber.  When both records carry measurement confidence
+        (``cost_std``), a *near-tie* — the new best beats the stored cost by
+        less than the larger of the two standard deviations — also keeps a
+        lower-variance stored record: inside the noise band the
+        better-trusted measurement wins, not the luckier one.  ``force=True``
+        bypasses the guard.  Returns True iff a record was written."""
         if self.db is None or self.key is None or self._committed:
             return False
         if self._db_hit is not None:
@@ -372,11 +408,24 @@ class Autotuning:
             if (
                 existing is not None
                 and np.isfinite(existing.cost)
-                and existing.cost < rec.cost  # ties: fresher data wins
                 and not self._visited(existing.point)
             ):
-                self._committed = True  # nothing better to say for this run
-                return False
+                keep = existing.cost < rec.cost  # ties: fresher data wins
+                if not keep:
+                    # near-tie tiebreak: inside the noise band the better-
+                    # measured record stands, symmetric in both directions.
+                    # A single-rep record has *unknown* variance, not zero —
+                    # its std must neither read as perfect confidence nor
+                    # widen the band (see _known_std).
+                    e_std = _known_std(existing)
+                    r_std = _known_std(rec)
+                    stds = [s for s in (e_std, r_std) if s is not None]
+                    if stds and (existing.cost - rec.cost) <= max(stds):
+                        if e_std is not None and (r_std is None or e_std < r_std):
+                            keep = True  # the lower-variance record stands
+                if keep:
+                    self._committed = True  # nothing better to say for this run
+                    return False
         self.db.put(rec)
         self._committed = True
         return True
@@ -445,6 +494,14 @@ class Autotuning:
         stabilization calls are issued per round on the same unique points and
         discarded, matching the sequential modes' per-candidate accounting.
 
+        ``measure_batch`` may return plain floats or
+        :class:`~repro.core.measure.MeasureResult` objects (the adaptive
+        measurement engine's output): rich results contribute their ``cost``
+        to the optimizer exactly like a float, while their bookkeeping
+        (``cost_std``, ``repeats_spent``, racing/roofline flags) is kept per
+        point — see :meth:`measurement_meta` — and ``num_measurements``
+        counts the repetitions actually spent rather than one per point.
+
         The candidate trajectory, history, and final point are identical to
         :meth:`entire_exec` with a deterministic cost function (same seed ⇒
         same visited points); only the measurement schedule changes.  With a
@@ -482,8 +539,18 @@ class Autotuning:
                     raise ValueError(
                         f"measure_batch returned {len(costs)} costs for {len(pts)} points"
                     )
-                self._measurements += len(pts)
-                measured = {k: float(c) for k, c in zip(to_measure, costs)}
+                from .measure import MeasureResult
+
+                measured = {}
+                for k, c in zip(to_measure, costs):
+                    if isinstance(c, MeasureResult):
+                        measured[k] = float(c.cost)
+                        self._measure_meta[k] = c.meta()
+                        # pruned/failed candidates honestly spent zero reps
+                        self._measurements += int(c.repeats_spent)
+                    else:
+                        measured[k] = float(c)
+                        self._measurements += 1
             full = []
             for k, p in zip(keys, points):
                 # measured this round, or answered by the cross-round cache

@@ -61,11 +61,21 @@ TPU_V5E = HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9)
 
 class RuntimeCost:
     """Median wall time of ``fn(*args)`` over ``repeats`` runs (after
-    ``warmup`` discarded runs — the `ignore` idea at measurement level)."""
+    ``warmup`` discarded runs — the `ignore` idea at measurement level).
+
+    The per-repeat raw times of the most recent call are kept on
+    :attr:`last_times` (:attr:`last_std` is their sample standard deviation),
+    so callers can surface measurement confidence — ``cost_std`` /
+    ``repeats_spent`` on committed :class:`~repro.tuning.TuningRecord`\\ s —
+    without re-measuring.  Control-flow exceptions (``KeyboardInterrupt``,
+    ``SystemExit``) raised by the measured callable always propagate; they
+    must never be classified into a candidate failure cost by the layers
+    above."""
 
     def __init__(self, warmup: int = 1, repeats: int = 3) -> None:
         self.warmup = warmup
         self.repeats = repeats
+        self.last_times: list = []  # raw measured reps of the latest call
 
     def __call__(self, fn: Callable, *args, **kwargs) -> float:
         try:
@@ -74,15 +84,31 @@ class RuntimeCost:
             block = jax.block_until_ready
         except Exception:  # pragma: no cover - jax always present here
             block = lambda x: x
-        for _ in range(self.warmup):
-            block(fn(*args, **kwargs))
-        times = []
-        for _ in range(self.repeats):
-            t0 = time.perf_counter()
-            block(fn(*args, **kwargs))
-            times.append(time.perf_counter() - t0)
+        self.last_times = []
+        try:
+            for _ in range(self.warmup):
+                block(fn(*args, **kwargs))
+            times = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                block(fn(*args, **kwargs))
+                times.append(time.perf_counter() - t0)
+        except (KeyboardInterrupt, SystemExit):
+            # an interrupt mid-measurement is a user action, not a candidate
+            # cost — re-raise before any classifying handler can eat it
+            raise
+        self.last_times = list(times)
         times.sort()
         return times[len(times) // 2]
+
+    @property
+    def last_std(self) -> float:
+        """Sample standard deviation of the latest call's measured reps."""
+        ts = self.last_times
+        if len(ts) < 2:
+            return 0.0
+        mean = sum(ts) / len(ts)
+        return (sum((t - mean) ** 2 for t in ts) / (len(ts) - 1)) ** 0.5
 
 
 # ----------------------------------------------------------- AOT compilation

@@ -65,6 +65,7 @@ class TunedStep:
         epsilon: float = 1.0,
         drift=None,
         warm_frac: float = 0.5,
+        measure=None,
     ) -> None:
         if db is not None and key is None and name is not None:
             # fingerprint a step by its name + knob space + caller context
@@ -103,6 +104,7 @@ class TunedStep:
                 drift=drift,
                 warm_frac=warm_frac,
                 name=name or "tuned_step",
+                measure=measure,
             )
 
     # ------------------------------------------------------------------ api

@@ -22,6 +22,7 @@ and re-tunes a context in the background when its costs drift.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import sys
 from typing import Callable, Optional
@@ -33,10 +34,16 @@ from repro.core import (
     Autotuning,
     ExecutableCache,
     LogIntDim,
+    MeasureEngine,
+    MeasurePolicy,
+    MeasureResult,
     RuntimeCost,
     SearchSpace,
     compile_fanout,
+    resolve_measure_policy,
+    time_rep,
 )
+from repro.core.measure import ENV_TUNE_MEASURE  # noqa: F401 - public re-export
 from repro.tuning import TuningDB, default_db, make_key
 
 from . import ops
@@ -258,6 +265,25 @@ def _resolve_jobs(jobs: Optional[int]) -> int:
     return max(1, jobs)
 
 
+def _roofline_bound(ex) -> Optional[float]:
+    """Analytic lower bound (seconds) of a compiled executable, or ``None``
+    when cost analysis is unavailable.  Conservative by construction: the
+    bound assumes peak accelerator hardware (the default
+    :data:`~repro.core.costs.TPU_V5E` spec), so it can only *under*-estimate
+    the real wall time — a candidate is pruned only when even its ideal
+    execution loses to the incumbent's measured cost.  On hosts far slower
+    than the spec (CPU interpret mode) the bound sits orders of magnitude
+    below any measurement and the prefilter simply never fires; pass an
+    explicit ``bound_fn`` to :func:`tune_call` for host-calibrated bounds."""
+    from repro.core import roofline_terms
+
+    try:
+        b = float(roofline_terms(ex, chips=1).bound_s)
+    except Exception:
+        return None
+    return b if b > 0.0 else None
+
+
 def tune_call(
     name: str,
     *args,
@@ -273,6 +299,9 @@ def tune_call(
     jobs: Optional[int] = None,
     drain: Optional[bool] = None,
     cost_fn: Optional[Callable] = None,
+    measure=None,
+    bound_fn: Optional[Callable] = None,
+    measure_stats: Optional[dict] = None,
     **kwargs,
 ):
     """Run a measured PATSMA search for this call context and commit the
@@ -282,20 +311,38 @@ def tune_call(
     Candidates are evaluated in batches: each optimizer round is deduplicated,
     its unique points AOT-compiled concurrently (``jobs`` threads, default
     ``REPRO_TUNE_JOBS`` or min(8, CPU count − 1) — XLA compilation releases
-    the GIL)
-    through the process-level executable cache, and then measured strictly
-    serially (one candidate at a time) so wall-clock timings stay honest.
-    By default measurement of early candidates overlaps the *remaining*
-    compiles, which maximizes throughput but lets background compile load
-    inflate early candidates' timings relative to late ones; ``drain=True``
-    (or ``REPRO_TUNE_DRAIN=1``) finishes every compile in the round before
-    the first measurement, trading some overlap for unbiased timings.
-    Failures are classified: expected illegal-tile candidates quietly cost
-    ``inf``, while each distinct unexpected error is logged once per search;
-    the committed record carries a ``crashed`` count either way.
+    the GIL) through the process-level executable cache, and then measured
+    strictly serially (one candidate at a time) so wall-clock timings stay
+    honest.
 
-    ``cost_fn(executable, *args) -> float`` overrides the default
-    :class:`RuntimeCost` (used by tests/benchmarks for deterministic costs).
+    ``measure`` picks the measurement policy (a
+    :class:`~repro.core.measure.MeasurePolicy`, ``"adaptive"``, ``"fixed"``,
+    or ``None`` → the ``REPRO_TUNE_MEASURE`` env var, default adaptive):
+
+    * **adaptive** — the racing engine: every candidate of a round gets one
+      measured repetition, dominated candidates are culled at their single-rep
+      cost, survivors escalate through the repeat ladder until separated;
+      candidates whose roofline lower bound already exceeds the incumbent's
+      measured cost skip measurement entirely.  The whole round's compiles
+      are drained before the first rep (racing compares candidates within a
+      round, so timings must not run against background compile load).
+    * **fixed** — the classic :class:`RuntimeCost` ``warmup``/``repeats``
+      median per candidate, trajectory-identical to earlier releases; early
+      candidates' measurements overlap the remaining compiles unless
+      ``drain=True`` (or ``REPRO_TUNE_DRAIN=1``).
+
+    Failures are classified either way: expected illegal-tile candidates
+    quietly cost ``inf``, each distinct unexpected error is logged once per
+    search, and the committed record carries a ``crashed`` count plus the
+    best point's ``cost_std``/``repeats_spent`` measurement confidence.
+
+    ``cost_fn(executable, *args) -> float`` overrides wall-clock timing
+    (used by tests/benchmarks for deterministic costs); under the adaptive
+    policy each call supplies one repetition, and the roofline prefilter is
+    disabled unless an explicit ``bound_fn(point, executable)`` provides
+    bounds in the cost function's own units.  ``measure_stats``, if given a
+    dict, receives the measurement engine's counters (reps spent, culls,
+    roofline prunes) when the search finishes.
     """
     import jax
 
@@ -304,6 +351,7 @@ def tune_call(
     key = make_key(name, args=args, kwargs=kwargs, space=space,
                    extra={"interpret": bool(interpret)})
     db = db if db is not None else default_db()
+    policy = resolve_measure_policy(measure, warmup=warmup, repeats=repeats)
     cost = cost_fn if cost_fn is not None else RuntimeCost(warmup=warmup, repeats=repeats)
     jobs = _resolve_jobs(jobs)
     if drain is None:
@@ -321,6 +369,8 @@ def tune_call(
         return build
 
     def note_failure(knobs: dict, exc: BaseException, stage: str) -> None:
+        if isinstance(exc, (KeyboardInterrupt, SystemExit)):
+            raise exc  # user interrupt, not a candidate failure
         kind = classify_failure(exc)
         if kind == "unexpected":
             sig = (type(exc).__name__, str(exc).splitlines()[0] if str(exc) else "")
@@ -334,24 +384,47 @@ def tune_call(
         elif verbose:
             print(f"[patsma] {name}: illegal candidate {knobs}: {exc}")
 
+    # fixed-path counters (the adaptive engine keeps its own): measure_stats
+    # must report repetitions spent in either mode
+    fixed_counts = {"rounds": 0, "candidates": 0, "measured": 0, "failed": 0,
+                    "reps": 0, "warmup_reps": 0}
+
     def measure_one(p, ex):
         if isinstance(ex, BaseException):
             note_failure(p, ex, "compile")
+            fixed_counts["failed"] += 1
             return np.inf
         try:
-            return float(cost(ex, *args))
+            c = float(cost(ex, *args))
         except Exception as e:
             note_failure(p, e, "measure")
+            fixed_counts["failed"] += 1
             return np.inf
+        fixed_counts["measured"] += 1
+        if isinstance(cost, RuntimeCost):
+            fixed_counts["reps"] += len(cost.last_times)
+            fixed_counts["warmup_reps"] += cost.warmup
+            # surface the fixed schedule's measurement confidence too
+            return MeasureResult(
+                cost=c,
+                cost_std=cost.last_std,
+                repeats_spent=len(cost.last_times),
+                times=list(cost.last_times),
+            )
+        fixed_counts["reps"] += 1  # one cost_fn call per candidate
+        return c
 
-    def measure_batch(points):
+    def measure_batch_fixed(points):
         # Concurrent AOT compile of the round's unique candidates, deduped
         # against every executable this process ever built; wall-clock
         # measurement stays strictly serial (one candidate at a time, in
         # order) but overlaps the *remaining* compiles — candidate i is
         # measured as soon as its executable is ready while i+1.. still
-        # compile on the pool.
+        # compile on the pool (``drain`` trades that overlap for unbiased
+        # timings).
         items = [((ctx, tuple(sorted(p.items()))), build_for(p)) for p in points]
+        fixed_counts["rounds"] += 1
+        fixed_counts["candidates"] += len(points)
         if jobs <= 1 or len(items) <= 1:
             compiled = compile_fanout(items, cache=_EXEC_CACHE, jobs=1)
             return [measure_one(p, ex) for p, ex in zip(points, compiled)]
@@ -366,6 +439,56 @@ def tune_call(
                 out.append(measure_one(p, f.result()))
         return out
 
+    # --- adaptive policy: racing engine over each compiled round
+    analytic = bound_fn if bound_fn is not None else (
+        _roofline_bound_for if cost_fn is None else None
+    )
+
+    def make_rep(ex):
+        if cost_fn is not None:
+            return lambda: float(cost_fn(ex, *args))
+        return lambda: time_rep(ex, *args)
+
+    engine_policy = policy
+    if cost_fn is not None and policy.mode == "adaptive" and not isinstance(
+        measure, MeasurePolicy
+    ):
+        # a user cost function owns its own stabilization (per-rep warmup
+        # would burn extra cost_fn calls) and returns costs in *its own
+        # units* — the seconds-denominated abs_noise prior would swamp
+        # small-magnitude costs and disable racing, so only the relative
+        # floor applies.  An explicitly passed MeasurePolicy is authoritative.
+        import dataclasses as _dc
+
+        engine_policy = _dc.replace(policy, warmup=0, abs_noise=0.0)
+    engine = MeasureEngine(engine_policy)
+
+    def measure_batch_adaptive(points):
+        # racing compares candidates *within* the round, so the round's
+        # compiles are always drained before the first repetition — overlap
+        # would bias early candidates against late ones
+        items = [((ctx, tuple(sorted(p.items()))), build_for(p)) for p in points]
+        compiled = compile_fanout(items, cache=_EXEC_CACHE,
+                                  jobs=min(jobs, max(1, len(items))))
+        # bounds are only worth computing once a finite incumbent exists —
+        # the prefilter is disabled before the first measured round anyway,
+        # so round 1 never pays HLO cost analysis per candidate
+        want_bounds = analytic is not None and math.isfinite(engine.best_measured)
+        reps, bounds = [], []
+        for p, ex in zip(points, compiled):
+            if isinstance(ex, BaseException):
+                note_failure(p, ex, "compile")
+                reps.append(None)
+                bounds.append(None)
+            else:
+                reps.append(make_rep(ex))
+                bounds.append(analytic(p, ex) if want_bounds else None)
+        engine.on_error = lambda i, e: note_failure(points[i], e, "measure")
+        return engine.measure_round(reps, bounds=bounds)
+
+    measure_batch = (
+        measure_batch_adaptive if policy.mode == "adaptive" else measure_batch_fixed
+    )
     at = Autotuning(
         space=space,
         ignore=0,  # RuntimeCost already discards warmup runs
@@ -378,7 +501,24 @@ def tune_call(
     )
     at.entire_exec_batch(measure_batch)
     at.commit()  # no-op if auto-committed / exact hit
+    if measure_stats is not None:
+        if policy.mode == "fixed":
+            stats = dict(engine.stats)  # zeroed template (right key set)
+            stats.update(fixed_counts)
+        else:
+            stats = dict(engine.stats)
+            if engine.noise is not None:
+                stats["noise_abs_floor"] = engine.noise.abs_floor
+                stats["noise_rel"] = engine.noise.rel
+        stats["mode"] = policy.mode
+        measure_stats.update(stats)
     return db.get(key)
+
+
+def _roofline_bound_for(point: dict, ex) -> Optional[float]:
+    """Default ``bound_fn``: roofline lower bound of the compiled candidate
+    (the point itself is already baked into the executable)."""
+    return _roofline_bound(ex)
 
 
 # --------------------------------------------------- router-backed dispatch

@@ -87,7 +87,10 @@ class RouteSpec:
     ``space``/``defaults``/``build`` receive the live call's arguments, so
     knob domains follow the request shapes exactly as the kernel registry's
     specs do.  ``drift=None`` disables drift detection for the route;
-    otherwise the dict is passed to :class:`DriftDetector`.
+    otherwise the dict is passed to :class:`DriftDetector`.  ``measure``
+    (a :class:`~repro.core.measure.MeasurePolicy` or ``"adaptive"`` /
+    ``"fixed"``) turns on multi-repetition explore racing in the route's
+    tuners; ``None`` keeps one request per candidate.
     """
 
     name: str
@@ -102,6 +105,7 @@ class RouteSpec:
     optimizer: Optional[Callable[..., NumericalOptimizer]] = None  # (space) -> opt
     drift: Optional[dict] = dataclasses.field(default_factory=dict)
     extra: dict = dataclasses.field(default_factory=dict)
+    measure: Any = None  # explore repetition policy (None = classic)
 
 
 class ContextRouter:
@@ -240,6 +244,7 @@ class ContextRouter:
                 drift=drift,
                 default_point=default_point,
                 name=enc,  # executables are keyed per-context + exact shapes
+                measure=spec.measure,
             )
             self._tuners[enc] = t
         if sig is not None:
@@ -306,6 +311,8 @@ class ContextRouter:
             "calls": 0,
             "explores": 0,
             "exploits": 0,
+            "explore_candidates": 0,
+            "culled_explores": 0,
             "deferred_explores": 0,
             "inband_builds": 0,
             "candidate_failures": 0,
@@ -314,9 +321,9 @@ class ContextRouter:
         }
         for t in self._tuners.values():
             for k in (
-                "calls", "explores", "exploits", "deferred_explores",
-                "inband_builds", "candidate_failures", "drift_resets",
-                "searches_completed",
+                "calls", "explores", "exploits", "explore_candidates",
+                "culled_explores", "deferred_explores", "inband_builds",
+                "candidate_failures", "drift_resets", "searches_completed",
             ):
                 total[k] += t.stats_[k]
         total["cache"] = self.cache.stats()

@@ -32,6 +32,19 @@ The ε-scheduler is a deterministic credit counter, not a coin flip: call
 explored fraction tracks ε exactly and tests can assert the schedule).
 Episode counters restart when a search converges or a drift reset begins.
 
+With a ``measure`` policy (:class:`~repro.core.measure.MeasurePolicy`) the
+tuner additionally races candidates *across requests*: each explore request
+contributes one repetition to the current candidate, and the candidate's
+cost is only fed to the search once it is decided — immediately (one rep)
+when its observed cost is dominated by the incumbent beyond the noise
+floor, after climbing the repeat ladder otherwise.  Explore credits are
+charged per repetition actually spent, so a culled candidate consumes a
+fraction of the ε-budget a full ladder evaluation would, and exploration
+converges in fewer live requests than a fixed multi-rep schedule.
+``measure=None`` (default) keeps the classic one-request-per-candidate
+behaviour; ``MeasurePolicy(mode="fixed", repeats=k)`` spends exactly ``k``
+requests per candidate and feeds the median.
+
 ``begin``/``observe`` must be called from a single serving thread; only the
 builds run concurrently.
 """
@@ -47,6 +60,7 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from repro.core import Autotuning, ExecutableCache
+from repro.core.measure import NoiseEstimate, resolve_measure_policy, summarize
 
 from .drift import DriftDetector
 
@@ -102,6 +116,11 @@ class OnlineTuner:
     default_point:
         Knobs to exploit before any measurement exists (a registered
         kernel's defaults); otherwise the driver's current best is used.
+    measure:
+        Optional per-candidate repetition policy
+        (:class:`~repro.core.measure.MeasurePolicy`, ``"adaptive"``, or
+        ``"fixed"``).  ``None`` keeps the classic behaviour: every explore
+        request is one full candidate evaluation.
     """
 
     def __init__(
@@ -117,6 +136,7 @@ class OnlineTuner:
         warm_spread: float = 0.2,
         default_point: Optional[dict] = None,
         name: str = "online",
+        measure=None,
     ) -> None:
         if not 0.0 <= epsilon <= 1.0:
             raise ValueError(f"epsilon must be in [0, 1], got {epsilon}")
@@ -145,11 +165,17 @@ class OnlineTuner:
         # per-search-episode ε accounting (reset on converge / drift reset)
         self._episode_calls = 0
         self._episode_explores = 0
+        # multi-rep explore measurement (None → one request per candidate)
+        self.measure = None if measure is None else resolve_measure_policy(measure)
+        self._rep_times: list = []  # current explore candidate's observed reps
+        self._rep_key = None  # space.key of the candidate being repped
         self.events: list = []  # drift resets, with context
         self.stats_ = {
             "calls": 0,
-            "explores": 0,
+            "explores": 0,  # explore *requests* (= repetitions spent)
             "exploits": 0,
+            "explore_candidates": 0,  # candidates decided (fed to the search)
+            "culled_explores": 0,  # candidates raced out before the full ladder
             "deferred_explores": 0,  # scheduled explore, compile still in flight
             "inband_builds": 0,  # builds that ran on the serving thread (must stay 0)
             "compiles_submitted": 0,
@@ -271,6 +297,10 @@ class OnlineTuner:
         if fut is None or not fut.done():
             return False, None
         result = fut.result()
+        if isinstance(result, (KeyboardInterrupt, SystemExit)):
+            # a user interrupt captured by a background build is control
+            # flow, never a candidate failure to absorb as inf
+            raise result
         if isinstance(result, BaseException):
             key = self._exec_key(point, args, kwargs)
             if self._cache.peek(key, default=_ABSENT) is _ABSENT:
@@ -363,12 +393,18 @@ class OnlineTuner:
 
         Explore costs feed the search (committing to the DB on
         convergence); exploit costs feed drift detection once the search has
-        converged.  Returns the drift level acted on this call (0 = none)."""
+        converged.  With a ``measure`` policy an explore cost is one
+        *repetition* — the candidate advances only once racing decides it.
+        Returns the drift level acted on this call (0 = none)."""
         cost = float(cost)
         at = self.at
         if decision.kind == EXPLORE:
             if not at.finished:
-                at.exec(cost)
+                if self.measure is None:
+                    self.stats_["explore_candidates"] += 1
+                    at.exec(cost)
+                else:
+                    self._feed_rep(cost)
                 if at.finished:
                     self._on_search_complete()
             return 0
@@ -379,11 +415,63 @@ class OnlineTuner:
                 return level
         return 0
 
+    # ------------------------------------------------- multi-rep exploration
+    def _feed_rep(self, cost: float) -> None:
+        """One observed repetition of the current explore candidate; feeds
+        the search only once the racing policy reaches a verdict."""
+        at = self.at
+        key = at.space.key(at.point)
+        if self._rep_key != key:  # candidate changed under us (reset, skip)
+            self._rep_times = []
+            self._rep_key = key
+        self._rep_times.append(float(cost))
+        verdict = self._race_verdict()
+        if verdict is None:
+            return  # escalate: the next explore request reps this candidate
+        final_cost, culled = verdict
+        self._rep_times = []
+        self._rep_key = None
+        self.stats_["explore_candidates"] += 1
+        if culled:
+            self.stats_["culled_explores"] += 1
+        at.exec(final_cost)
+
+    def _race_verdict(self):
+        """``None`` (needs another rep) or ``(cost, culled)`` for the
+        buffered candidate.  Deterministic given the observed costs: decisions
+        happen at ladder rungs only, culling when the candidate's CI low end
+        is beyond the incumbent's noise band (plus margin), stopping early
+        when it clearly wins, finalizing at the ladder top regardless."""
+        p = self.measure
+        n = len(self._rep_times)
+        noise = NoiseEstimate(p.abs_noise, p.rel_noise)
+        med, _, lo, hi = summarize(self._rep_times, noise)
+        if p.mode == "fixed":
+            return (med, False) if n >= p.repeats else None
+        if n >= p.ladder[-1]:
+            return (med, False)
+        if n not in p.ladder:
+            return None  # between rungs
+        inc = float(self.at.best_cost)
+        if not np.isfinite(inc):
+            # establishing the incumbent: a mid-ladder median is denoised
+            # enough to race everything that follows against
+            rung = p.ladder[min(1, len(p.ladder) - 1)]
+            return (med, False) if n >= rung else None
+        inc_floor = noise.floor(inc)
+        if lo > inc + inc_floor * (1.0 + p.margin):
+            return (med, True)  # dominated beyond the noise floor: cull
+        if hi < inc - inc_floor:
+            return (med, False)  # clear improvement: no more reps needed
+        return None  # within noise of the incumbent: climb the ladder
+
     # --------------------------------------------------------- state changes
     def _on_search_complete(self) -> None:
         self.stats_["searches_completed"] += 1
         self._episode_calls = 0
         self._episode_explores = 0
+        self._rep_times = []
+        self._rep_key = None
         if self.drift is not None:
             self.drift.rebaseline()
 
@@ -411,6 +499,8 @@ class OnlineTuner:
             self.drift.rebaseline()
         self._episode_calls = 0
         self._episode_explores = 0
+        self._rep_times = []  # pre-reset reps describe the old environment
+        self._rep_key = None
         self.stats_["drift_resets"] += 1
         self.events.append(
             {"seq": self._seq, "level": int(level), "point": dict(incumbent),

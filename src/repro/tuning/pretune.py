@@ -11,7 +11,11 @@ Sweeps the registered (kernel, shape) grid, runs the PATSMA search per
 context, and commits every record atomically.  Each context's candidate
 rounds are AOT-compiled concurrently (``--jobs`` threads; measurement stays
 serial) through the process-wide executable cache, so revisited candidates
-never recompile.  The committed ``tuned/cpu.json`` snapshot is what the test
+never recompile.  ``--measure adaptive`` (the default) races each round's
+candidates — dominated ones are culled after a single repetition and
+roofline-hopeless ones skip measurement — while ``--measure fixed`` keeps
+the classic ``RuntimeCost`` fixed-repeat loop for trajectory-pinned
+reproduction; the run summary reports repetitions spent, culls, and prunes.  The committed ``tuned/cpu.json`` snapshot is what the test
 suite and CI replay: the suite's kernel dispatches become exact fingerprint
 hits, so they skip straight to the stored best with zero re-measurement.  On
 a TPU host the same command (without ``--smoke``) produces the production
@@ -176,6 +180,11 @@ def main(argv=None) -> int:
         "--jobs", type=int, default=None,
         help="concurrent AOT compiles per tuning round (default: REPRO_TUNE_JOBS or cpu count)",
     )
+    ap.add_argument(
+        "--measure", choices=("adaptive", "fixed"), default=None,
+        help="measurement policy: adaptive racing + roofline prefilter, or the "
+             "classic fixed-repeat loop (default: REPRO_TUNE_MEASURE or adaptive)",
+    )
     args = ap.parse_args(argv)
 
     from repro.kernels.autotuned import exec_cache, registered, tune_call
@@ -203,9 +212,13 @@ def main(argv=None) -> int:
 
     n_done = 0
     t_all = time.perf_counter()
+    # aggregate measurement-engine counters across the sweep (run summary)
+    totals = {"reps": 0, "warmup_reps": 0, "calibration_reps": 0,
+              "culled": 0, "pruned_roofline": 0, "measured": 0, "failed": 0}
     for name, label, build in cases:
         call_args = build()
         t0 = time.perf_counter()
+        mstats: dict = {}
         rec = tune_call(
             name,
             *call_args,
@@ -216,16 +229,25 @@ def main(argv=None) -> int:
             seed=args.seed,
             jobs=args.jobs,
             source="pretune",
+            measure=args.measure,
+            measure_stats=mstats,
         )
         dt = time.perf_counter() - t0
+        for k in totals:
+            totals[k] += int(mstats.get(k, 0))
         if rec is None:
             print(f"  {name}/{label}: every candidate failed; nothing stored ({dt:.1f}s)",
                   file=sys.stderr)
             continue
         crashed = f" crashed={rec.crashed}" if rec.crashed else ""
+        raced = ""
+        if mstats.get("mode") == "adaptive" and mstats.get("measured"):
+            raced = (f" reps={mstats['reps']}"
+                     f" culled={mstats['culled']}"
+                     f" pruned={mstats['pruned_roofline']}")
         print(
             f"  {name}/{label}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
-            f"evals={rec.evals}{crashed} ({dt:.1f}s)"
+            f"evals={rec.evals}{crashed}{raced} ({dt:.1f}s)"
         )
         n_done += 1
     db.save()
@@ -235,6 +257,15 @@ def main(argv=None) -> int:
         f"({time.perf_counter() - t_all:.1f}s); exec cache: {cs['misses']} compiles, "
         f"{cs['hits']} hits, {cs['recompiles']} recompiles"
     )
+    if totals["measured"] or totals["reps"]:
+        print(
+            f"pretune: measurement: {totals['reps']} reps "
+            f"(+{totals['warmup_reps']} warmup, {totals['calibration_reps']} "
+            f"calibration) over {totals['measured']} candidates; "
+            f"{totals['culled']} culled by racing, "
+            f"{totals['pruned_roofline']} roofline-pruned, "
+            f"{totals['failed']} failed"
+        )
     return 0
 
 

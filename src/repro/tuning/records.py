@@ -193,7 +193,14 @@ def make_key(
 # ------------------------------------------------------------------ records
 @dataclasses.dataclass
 class TuningRecord:
-    """One persisted tuning result: the best point found for a context key."""
+    """One persisted tuning result: the best point found for a context key.
+
+    ``cost_std`` / ``repeats_spent`` carry the measurement confidence of the
+    stored cost (standard deviation over the repetitions the measurement
+    engine actually spent on the best point).  Both are optional: records
+    written before the adaptive measurement engine — and costs delivered by
+    user cost functions — load as ``None``, which every consumer must treat
+    as "confidence unknown"."""
 
     key: TuningKey
     point: dict
@@ -202,6 +209,8 @@ class TuningRecord:
     source: str = "online"  # "online" | "pretune"
     created: float = dataclasses.field(default_factory=time.time)
     crashed: int = 0  # distinct candidates that failed during the search
+    cost_std: Optional[float] = None  # std over the best point's measured reps
+    repeats_spent: Optional[int] = None  # reps behind the stored cost
 
     def to_json(self) -> dict:
         return {
@@ -212,10 +221,14 @@ class TuningRecord:
             "source": self.source,
             "created": self.created,
             "crashed": self.crashed,
+            "cost_std": self.cost_std,
+            "repeats_spent": self.repeats_spent,
         }
 
     @classmethod
     def from_json(cls, d: Mapping[str, Any]) -> "TuningRecord":
+        cost_std = d.get("cost_std")
+        repeats_spent = d.get("repeats_spent")
         return cls(
             key=TuningKey.from_json(d["key"]),
             point=dict(d["point"]),
@@ -224,4 +237,6 @@ class TuningRecord:
             source=str(d.get("source", "online")),
             created=float(d.get("created", 0.0)),
             crashed=int(d.get("crashed", 0)),
+            cost_std=float(cost_std) if cost_std is not None else None,
+            repeats_spent=int(repeats_spent) if repeats_spent is not None else None,
         )

@@ -76,6 +76,15 @@ def record_from(autotuner, key, *, source: str = "online") -> Optional[TuningRec
         # every candidate crashed / was never measured: storing this would
         # replay a broken point as an exact hit forever
         return None
+    # measurement confidence of the best point, when the measurement engine
+    # delivered it (None for plain-float costs and pre-engine drivers)
+    cost_std = repeats_spent = None
+    meta_of = getattr(autotuner, "measurement_meta", None)
+    if callable(meta_of):
+        meta = meta_of()
+        if meta is not None:
+            cost_std = meta.get("cost_std")
+            repeats_spent = meta.get("repeats_spent")
     return TuningRecord(
         key=key,
         point=dict(autotuner.best_point),
@@ -83,4 +92,6 @@ def record_from(autotuner, key, *, source: str = "online") -> Optional[TuningRec
         evals=int(autotuner.num_evals),
         source=source,
         crashed=int(getattr(autotuner, "num_crashed", 0)),
+        cost_std=cost_std,
+        repeats_spent=repeats_spent,
     )
