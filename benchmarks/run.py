@@ -1,7 +1,7 @@
 """Benchmark harness — one benchmark per paper table/figure (DESIGN §9).
 
     PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run csa_vs_nm  # one
+    PYTHONPATH=src python -m benchmarks.run strategy_shootout  # one
     PYTHONPATH=src python benchmarks/run.py --smoke --out BENCH_ci.json
 
 Each benchmark prints ``name,us_per_call,derived`` CSV lines.  ``--smoke``
@@ -25,7 +25,7 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 BENCHES = [
-    "csa_vs_nm",  # §2.1: CSA vs NM vs random; Eq.1/Eq.2
+    "strategy_shootout",  # §2.1 via the strategy layer: csa vs nm vs hybrid; Eq.1/Eq.2
     "rb_gauss_seidel",  # §3: the paper's illustrative example (Fig. 1a/1b)
     "kernel_autotune",  # §2.3: block-size tuning on Pallas kernels
     "tuning_warmstart",  # tuning DB: cold vs near-miss vs exact-replay cost

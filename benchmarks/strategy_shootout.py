@@ -1,0 +1,165 @@
+"""Search-strategy shootout — the paper's §2.1 CSA-vs-NM comparison rebuilt
+on the composable strategy layer.
+
+Four strategies race on the same deterministic cost models with the *same
+total tell budget* (paper Eq. (1)/(2) units):
+
+* ``csa``     — the paper's default global search;
+* ``nm``      — pure local refinement;
+* ``csa+nm``  — the paper's hybrid as a :class:`~repro.core.strategy.Pipeline`
+  (CSA explores, NM is warm-seeded at CSA's best and polishes);
+* ``csa|nm``  — a :class:`~repro.core.strategy.Portfolio`: both race,
+  successive halving reallocates the budget toward the leader;
+* ``random``  — the control.
+
+The tracked claims: every strategy consumes the identical tell count
+(budget accounting is exact through pipelines and portfolios), and the
+hybrid's best is no worse than pure CSA's on every cost model — the
+``pipeline_regret_ratio`` row lets ``benchmarks/compare.py`` watch
+hybrid-vs-CSA regret across PRs.  Paper Eq. (1)/(2) evaluation counts are
+re-checked through the ``Autotuning`` driver, including a strategy-built
+pipeline (whose budget is the same ``max_iter * (ignore + 1) * num_opt``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Autotuning, NelderMead, make_strategy
+
+STRATEGIES = ("csa", "nm", "random", "csa+nm", "csa|nm")
+
+
+def sphere(z):
+    return float(np.sum(z**2))
+
+
+def rastrigin(z):
+    x = z * 2.0
+    return float(10 * x.size + np.sum(x**2 - 10 * np.cos(2 * np.pi * x)))
+
+
+def rosenbrock(z):
+    x = z * 2.0
+    return float(np.sum(100 * (x[1:] - x[:-1] ** 2) ** 2 + (1 - x[:-1]) ** 2))
+
+
+COST_MODELS = {"sphere": sphere, "rastrigin": rastrigin, "rosenbrock": rosenbrock}
+
+
+def drive(opt, fn):
+    """Run a strategy to its end via ask/tell; returns (best, tells, s/tell)."""
+    t0 = time.perf_counter()
+    n = 0
+    while not opt.is_end():
+        batch = opt.ask()
+        if not batch:
+            break
+        opt.tell([fn(np.asarray(z)) for z in batch])
+        n += len(batch)
+    return opt.best_cost, n, (time.perf_counter() - t0) / max(n, 1)
+
+
+def run(seeds=range(8), budget: int = 320, dims=(2, 4), verbose: bool = True) -> dict:
+    table = {}
+    tells_equal = True
+    for fname, fn in COST_MODELS.items():
+        for dim in dims:
+            rows = {}
+            for spec in STRATEGIES:
+                bests, tells, us = [], set(), []
+                for s in seeds:
+                    opt = make_strategy(
+                        spec, dim, num_opt=4, max_iter=budget // 4, seed=s
+                    )
+                    b, n, t = drive(opt, fn)
+                    bests.append(b)
+                    tells.add(n)
+                    us.append(t * 1e6)
+                rows[spec] = {
+                    "median_best": float(np.median(bests)),
+                    "tells": sorted(tells),
+                    "us_per_tell": float(np.median(us)),
+                }
+                tells_equal &= tells == {budget}
+            table[f"{fname}_d{dim}"] = rows
+            if verbose:
+                print(f"{fname} d={dim}: " + "  ".join(
+                    f"{k}={v['median_best']:.3g}" for k, v in rows.items()
+                ))
+
+    # hybrid-vs-CSA regret (optimum is 0 for all three models, so the median
+    # best IS the regret); ratio < 1 means the hybrid wins
+    eps = 1e-9
+    ratios = {
+        spec: [
+            (rows[spec]["median_best"] + eps) / (rows["csa"]["median_best"] + eps)
+            for rows in table.values()
+        ]
+        for spec in ("csa+nm", "csa|nm")
+    }
+    pipeline_le_csa = all(r <= 1.0 + 1e-12 for r in ratios["csa+nm"])
+
+    # Eq.1 / Eq.2 exact counts through the Autotuning driver — including a
+    # strategy-built pipeline, whose total budget is the same Eq.1 product
+    eq = {}
+    for ignore in (0, 1, 2):
+        at = Autotuning(0, 63, ignore=ignore, dim=1, num_opt=4, max_iter=5)
+        at.entire_exec(lambda p: (p - 31) ** 2)
+        eq[f"csa_ignore{ignore}"] = (at.num_measurements, 5 * (ignore + 1) * 4)
+        nm = NelderMead(1, error=0.0, max_iter=12)
+        at = Autotuning(0, 63, ignore=ignore, optimizer=nm)
+        at.entire_exec(lambda p: (p - 31) ** 2)
+        eq[f"nm_ignore{ignore}"] = (at.num_measurements, 12 * (ignore + 1))
+        at = Autotuning(
+            0, 63, ignore=ignore, dim=1, strategy="csa+nm", num_opt=4, max_iter=5
+        )
+        at.entire_exec(lambda p: (p - 31) ** 2)
+        eq[f"pipeline_ignore{ignore}"] = (at.num_measurements, 5 * (ignore + 1) * 4)
+    assert all(a == b for a, b in eq.values()), eq
+    return {
+        "table": table,
+        "eq_counts": eq,
+        "tells_equal": tells_equal,
+        "pipeline_le_csa": pipeline_le_csa,
+        "pipeline_regret_ratio": float(np.median(ratios["csa+nm"])),
+        "portfolio_regret_ratio": float(np.median(ratios["csa|nm"])),
+    }
+
+
+def smoke():
+    """CI lane: reduced seed count / budget / dims, same structure."""
+    out = run(seeds=range(3), budget=120, dims=(2,), verbose=False)
+    eq_ok = all(a == b for a, b in out["eq_counts"].values())
+    print(f"strategy_shootout_eq1_eq2,0.0,exact={eq_ok}")
+    print(f"strategy_shootout_tells,0.0,equal={out['tells_equal']}")
+    print(
+        f"strategy_shootout_pipeline,0.0,"
+        f"le_csa={out['pipeline_le_csa']} ratio={out['pipeline_regret_ratio']:.3g}"
+    )
+    return {
+        "eq_exact": eq_ok,
+        "tells_equal": out["tells_equal"],
+        "pipeline_le_csa": out["pipeline_le_csa"],
+        "pipeline_regret_ratio": out["pipeline_regret_ratio"],
+        "portfolio_regret_ratio": out["portfolio_regret_ratio"],
+    }
+
+
+def main(argv=None):
+    out = run()
+    for case, rows in out["table"].items():
+        for spec, v in rows.items():
+            print(
+                f"strategy_shootout_{case}_{spec},{v['us_per_tell']:.2f},"
+                f"best={v['median_best']:.4g}"
+            )
+    eq_ok = all(a == b for a, b in out["eq_counts"].values())
+    print(f"strategy_shootout_eq1_eq2,0.0,exact={eq_ok}")
+    print(f"strategy_shootout_tells,0.0,equal={out['tells_equal']}")
+    print(
+        f"strategy_shootout_pipeline,0.0,"
+        f"le_csa={out['pipeline_le_csa']} ratio={out['pipeline_regret_ratio']:.3g}"
+    )
+    return out

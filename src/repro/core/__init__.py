@@ -29,6 +29,13 @@ from .measure import (
 from .nelder_mead import NelderMead
 from .optimizer import NumericalOptimizer
 from .space import ChoiceDim, FloatDim, IntDim, LogIntDim, SearchSpace
+from .strategy import (
+    Pipeline,
+    Portfolio,
+    SearchStrategy,
+    make_strategy,
+    strategy_label,
+)
 from .tuned_jit import TunedStep
 
 __all__ = [
@@ -38,6 +45,11 @@ __all__ = [
     "GridSearch",
     "RandomSearch",
     "NumericalOptimizer",
+    "SearchStrategy",
+    "Pipeline",
+    "Portfolio",
+    "make_strategy",
+    "strategy_label",
     "SearchSpace",
     "IntDim",
     "FloatDim",

@@ -69,9 +69,15 @@ class Autotuning:
         Autotuning(min, max, ignore, dim, num_opt, max_iter)      # default CSA
         Autotuning(min, max, ignore, optimizer=<NumericalOptimizer>)
 
-    plus the extended form ``Autotuning(space=SearchSpace(...), ...)``.
-    Decoded points are dicts ``{dim_name: value}``; the paper-style vector
-    form is available via ``point_vector``.
+    plus the extended forms ``Autotuning(space=SearchSpace(...), ...)`` and
+    ``Autotuning(..., strategy="csa+nm")`` — a search-strategy spec parsed by
+    :func:`repro.core.strategy.make_strategy` (the paper's CSA→NM hybrid as
+    a staged pipeline, portfolios, ...) over the same ``num_opt * max_iter``
+    tell budget the default CSA consumes.  ``optimizer=`` remains the
+    single-method shim and is mutually exclusive with ``strategy=``; the
+    resolved spec is exposed as :attr:`strategy` and stamped on committed
+    tuning records.  Decoded points are dicts ``{dim_name: value}``; the
+    paper-style vector form is available via ``point_vector``.
     """
 
     def __init__(
@@ -84,6 +90,7 @@ class Autotuning:
         max_iter: int = 20,
         *,
         optimizer: Optional[NumericalOptimizer] = None,
+        strategy: Any = None,
         space: Optional[SearchSpace] = None,
         integer: bool = True,
         seed: int = 0,
@@ -100,8 +107,24 @@ class Autotuning:
             min, max, dim, integer=integer
         )
         d = len(self.space)
+        if strategy is not None and optimizer is not None:
+            raise ValueError("pass either optimizer= or strategy=, not both")
+        if isinstance(strategy, str):
+            from .strategy import make_strategy
+
+            optimizer = make_strategy(
+                strategy, d, num_opt=num_opt, max_iter=max_iter, seed=seed
+            )
+        elif strategy is not None:  # a SearchStrategy / NumericalOptimizer object
+            optimizer = strategy
         self.optimizer = optimizer if optimizer is not None else CSA(
             d, num_opt=num_opt, max_iter=max_iter, seed=seed
+        )
+        # provenance spec stamped on committed TuningRecords (records.strategy)
+        from .strategy import strategy_label
+
+        self.strategy = getattr(self.optimizer, "spec", None) or strategy_label(
+            self.optimizer
         )
         if self.optimizer.get_dimension() != d:
             raise ValueError(
@@ -117,6 +140,7 @@ class Autotuning:
         self._measurements = 0  # target iterations spent on tuning (incl. ignored)
         self._history: list = []  # (point_dict, cost)
         self._measure_meta: dict = {}  # space.key -> measurement bookkeeping
+        self._measured_costs: dict = {}  # space.key -> last *real* measured cost
         # persistent tuning store (repro.tuning): exact hit / warm seed
         self.db = db
         self.key = key
@@ -240,6 +264,7 @@ class Autotuning:
         warm_point: Optional[dict] = None,
         budget_frac: Optional[float] = None,
         spread: float = 0.2,
+        refine: bool = False,
     ) -> None:
         """Re-enter tuning (e.g. when the watchdog detects environment drift).
 
@@ -256,8 +281,19 @@ class Autotuning:
         optimizer is re-seeded around the given decoded point (normally the
         pre-drift best, which is already deployed) and, with ``budget_frac``,
         its budget is shrunk — the online-tuning analogue of the DB
-        near-miss warm start."""
-        self.optimizer.reset(level)
+        near-miss warm start.
+
+        ``refine=True`` asks a staged strategy to re-enter through its final
+        *refinement* stage alone (``Pipeline.enter_refinement``) instead of
+        resetting at ``level`` — the environment-drift response: the optimum's
+        basin is assumed unchanged, so a local NM walk from ``warm_point``
+        beats re-running the global stage.  Optimizers without a refinement
+        stage fall back to the plain ``reset(level)``."""
+        refiner = getattr(self.optimizer, "enter_refinement", None) if refine else None
+        if refiner is not None and refiner():
+            pass  # the strategy re-entered via its refinement stage
+        else:
+            self.optimizer.reset(level)
         self._cost_cache.clear()
         if level >= 1:
             self._history.clear()
@@ -265,6 +301,7 @@ class Autotuning:
             # roofline-pruned candidate (charged its analytic bound, never
             # run) must be eligible for a real measurement in the re-search
             self._measure_meta.clear()
+            self._measured_costs.clear()
         # a reset means the environment drifted: re-enter real tuning even if
         # this run was answered from the DB, and allow a fresh commit
         self._db_hit = None
@@ -544,12 +581,33 @@ class Autotuning:
                 measured = {}
                 for k, c in zip(to_measure, costs):
                     if isinstance(c, MeasureResult):
-                        measured[k] = float(c.cost)
-                        self._measure_meta[k] = c.meta()
+                        prev = self._measure_meta.get(k)
+                        if (
+                            c.pruned is not None
+                            and prev is not None
+                            and prev.get("pruned") is None
+                            and k in self._measured_costs
+                        ):
+                            # the point was *really* measured in an earlier
+                            # round — typically by a previous pipeline stage —
+                            # and a later revisit came back analytically
+                            # pruned (the engine's incumbent moved on).  The
+                            # optimistic lower bound must not clobber the
+                            # real measurement: keep the stored meta and
+                            # deliver the measured cost, or the next stage
+                            # would sit on a bound it can never realize.
+                            measured[k] = self._measured_costs[k]
+                        else:
+                            measured[k] = float(c.cost)
+                            self._measure_meta[k] = c.meta()
+                            if c.pruned is None and np.isfinite(c.cost):
+                                self._measured_costs[k] = float(c.cost)
                         # pruned/failed candidates honestly spent zero reps
                         self._measurements += int(c.repeats_spent)
                     else:
                         measured[k] = float(c)
+                        if np.isfinite(c):
+                            self._measured_costs[k] = float(c)
                         self._measurements += 1
             full = []
             for k, p in zip(keys, points):

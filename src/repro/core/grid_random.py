@@ -52,9 +52,18 @@ class GridSearch(NumericalOptimizer):
         return float(self._best_e)
 
     def reset(self, level: int = 0) -> None:
+        """Reset contract parity with CSA (the PR 3 hardening): every level
+        restarts the sweep with the full cold budget; level 0 retains the
+        found solution, level 1 keeps the best *coordinates* but drops the
+        stale energy (CSA's drift-reset semantics — the point must re-prove
+        itself post-drift; NM instead rebuilds cold at level >= 1), and
+        level >= 2 is complete."""
         self._i = 0
         self._done = False
-        if level >= 2:
+        if level == 1:
+            self._best_e = np.inf  # coordinates kept, stale energy dropped
+        elif level >= 2:
+            self._best_x = self._pts[0].copy()
             self._best_e = np.inf
         self._clear_batch_state()
 
@@ -80,6 +89,7 @@ class RandomSearch(NumericalOptimizer):
     def __init__(self, dim: int, max_iter: int = 64, seed: int = 0) -> None:
         self._dim = dim
         self._max = int(max_iter)
+        self._cold_max = int(max_iter)  # shrink_budget narrows the live value
         self._seed = seed
         self._rng = np.random.default_rng(seed)
         self._i = 0
@@ -104,11 +114,27 @@ class RandomSearch(NumericalOptimizer):
     def best_cost(self) -> float:
         return float(self._best_e)
 
+    def shrink_budget(self, frac: float) -> bool:
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"frac must be in (0, 1], got {frac}")
+        self._max = max(1, int(np.ceil(self._max * frac)))
+        return True
+
     def reset(self, level: int = 0) -> None:
+        """Reset contract parity with CSA (the PR 3 hardening): every level
+        restores the cold sample budget (a warm-start-shrunk budget never
+        compounds); level 0 retains the found solution, level 1 keeps the
+        best coordinates but drops the stale energy (CSA's drift-reset
+        semantics; NM instead rebuilds cold at level >= 1), and level >= 2
+        additionally replays the seed's RNG stream from the start."""
         self._i = 0
         self._done = False
-        if level >= 2:
+        self._max = self._cold_max
+        if level == 1:
+            self._best_e = np.inf  # coordinates kept, stale energy dropped
+        elif level >= 2:
             self._rng = np.random.default_rng(self._seed)
+            self._best_x = np.zeros(self._dim)
             self._best_e = np.inf
         self._clear_batch_state()
 

@@ -52,6 +52,7 @@ class TunedStep:
         num_opt: int = 4,
         max_iter: int = 10,
         optimizer: Optional[NumericalOptimizer] = None,
+        strategy: Optional[str] = None,
         cache: bool = True,
         seed: int = 0,
         verbose: bool = False,
@@ -79,6 +80,7 @@ class TunedStep:
             num_opt=num_opt,
             max_iter=max_iter,
             optimizer=optimizer,
+            strategy=strategy,
             cache=cache,
             seed=seed,
             verbose=verbose,

@@ -30,7 +30,6 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import (
-    CSA,
     Autotuning,
     ExecutableCache,
     LogIntDim,
@@ -302,6 +301,7 @@ def tune_call(
     measure=None,
     bound_fn: Optional[Callable] = None,
     measure_stats: Optional[dict] = None,
+    strategy: Optional[str] = None,
     **kwargs,
 ):
     """Run a measured PATSMA search for this call context and commit the
@@ -343,6 +343,14 @@ def tune_call(
     bounds in the cost function's own units.  ``measure_stats``, if given a
     dict, receives the measurement engine's counters (reps spent, culls,
     roofline prunes) when the search finishes.
+
+    ``strategy`` picks the search strategy (``"csa+nm"``, ``"csa|nm"``, ...
+    — the :func:`repro.core.strategy.make_strategy` grammar) over the same
+    ``num_opt * max_iter`` tell budget the default CSA consumes; ``None``
+    keeps the classic CSA search, trajectory-identical to earlier releases.
+    A :class:`~repro.core.strategy.Portfolio` strategy reuses the adaptive
+    engine's calibrated noise floor for its statistically-separated-lead
+    culls.  The spec is stamped on the committed record (``strategy``).
     """
     import jax
 
@@ -467,6 +475,10 @@ def tune_call(
         # racing compares candidates *within* the round, so the round's
         # compiles are always drained before the first repetition — overlap
         # would bias early candidates against late ones
+        if engine.noise is not None and hasattr(at.optimizer, "set_noise"):
+            # a Portfolio strategy separates leads with the same noise floor
+            # the engine calibrated for candidate racing
+            at.optimizer.set_noise(engine.noise)
         items = [((ctx, tuple(sorted(p.items()))), build_for(p)) for p in points]
         compiled = compile_fanout(items, cache=_EXEC_CACHE,
                                   jobs=min(jobs, max(1, len(items))))
@@ -492,7 +504,10 @@ def tune_call(
     at = Autotuning(
         space=space,
         ignore=0,  # RuntimeCost already discards warmup runs
-        optimizer=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
+        strategy=strategy,  # None -> the classic default CSA search
+        num_opt=num_opt,
+        max_iter=max_iter,
+        seed=seed,
         cache=True,
         verbose=verbose,
         db=db,

@@ -35,7 +35,7 @@ import dataclasses
 import json
 from typing import Any, Callable, Mapping, Optional
 
-from repro.core import CSA, Autotuning, ExecutableCache
+from repro.core import Autotuning, ExecutableCache
 from repro.core.optimizer import NumericalOptimizer
 
 from .drift import DriftDetector
@@ -90,7 +90,12 @@ class RouteSpec:
     otherwise the dict is passed to :class:`DriftDetector`.  ``measure``
     (a :class:`~repro.core.measure.MeasurePolicy` or ``"adaptive"`` /
     ``"fixed"``) turns on multi-repetition explore racing in the route's
-    tuners; ``None`` keeps one request per candidate.
+    tuners; ``None`` keeps one request per candidate.  ``strategy`` is a
+    search-strategy spec string (``"csa+nm"``, ``"csa|nm"``, ... — see
+    :func:`repro.core.strategy.make_strategy`) used to build each context's
+    search; with a staged strategy, environment drift (level 1) re-tunes
+    through the refinement stage alone.  ``optimizer`` (a ``space -> opt``
+    factory) overrides it.
     """
 
     name: str
@@ -103,6 +108,7 @@ class RouteSpec:
     max_iter: int = 4
     seed: int = 0
     optimizer: Optional[Callable[..., NumericalOptimizer]] = None  # (space) -> opt
+    strategy: Optional[str] = None  # strategy spec (make_strategy grammar)
     drift: Optional[dict] = dataclasses.field(default_factory=dict)
     extra: dict = dataclasses.field(default_factory=dict)
     measure: Any = None  # explore repetition policy (None = classic)
@@ -211,17 +217,15 @@ class ContextRouter:
         enc = key.encode()
         t = self._tuners.get(enc)
         if t is None:
-            if spec.optimizer is not None:
-                opt = spec.optimizer(space)
-            else:
-                opt = CSA(
-                    len(space), num_opt=spec.num_opt,
-                    max_iter=spec.max_iter, seed=spec.seed,
-                )
+            opt = spec.optimizer(space) if spec.optimizer is not None else None
             at = Autotuning(
                 space=space,
                 ignore=spec.ignore,
-                optimizer=opt,
+                optimizer=opt,  # factory-built override, else strategy/CSA
+                strategy=spec.strategy if opt is None else None,
+                num_opt=spec.num_opt,
+                max_iter=spec.max_iter,
+                seed=spec.seed,
                 cache=True,
                 db=self.db,
                 key=key,

@@ -477,7 +477,15 @@ class OnlineTuner:
 
     def _drift_reset(self, level: int) -> None:
         """The tuned config degraded: re-enter tuning with a warm re-search
-        seeded at the deployed point, at ``warm_frac`` of the cold budget."""
+        seeded at the deployed point, at ``warm_frac`` of the cold budget.
+
+        Level-aware when the search runs a staged strategy (``strategy=
+        "csa+nm"`` → a :class:`~repro.core.strategy.Pipeline`): level 1
+        (environment drift — the deployed point's cost floor moved, its
+        basin did not) re-tunes through the final **NM refinement stage
+        alone**, warm-seeded at the deployed point; level 2 (workload shift
+        — the landscape itself changed) restarts the full pipeline.  Plain
+        single-optimizer searches keep the classic warm ``reset(level)``."""
         at = self.at
         incumbent = at.best_point
         # the trigger event holds the post-drift median (the detector clears
@@ -490,6 +498,7 @@ class OnlineTuner:
             warm_point=incumbent,
             budget_frac=self.warm_frac,
             spread=self.warm_spread,
+            refine=level < 2,
         )
         if fresh is not None and np.isfinite(fresh):
             # the incumbent's live post-drift cost: keeps best_point/commit
@@ -504,7 +513,8 @@ class OnlineTuner:
         self.stats_["drift_resets"] += 1
         self.events.append(
             {"seq": self._seq, "level": int(level), "point": dict(incumbent),
-             "recent_cost": fresh}
+             "recent_cost": fresh,
+             "refined": bool(getattr(at.optimizer, "refining", False))}
         )
 
     # ------------------------------------------------------------- offline

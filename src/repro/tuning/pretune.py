@@ -22,10 +22,13 @@ a TPU host the same command (without ``--smoke``) produces the production
 snapshot for that device kind.
 
 ``--list`` prints the registered grid with each case's DB status (exact hit
-/ warm neighbor / cold) without tuning anything, and ``--only <glob>``
-restricts a sweep to matching cases — together they are how a serving
-deployment seeds exactly the router contexts its traffic will touch,
-without sweeping the whole grid.
+/ warm neighbor / cold, plus the stored record's search strategy) without
+tuning anything, and ``--only <glob>`` restricts a sweep to matching cases —
+together they are how a serving deployment seeds exactly the router contexts
+its traffic will touch, without sweeping the whole grid.  ``--strategy
+csa+nm`` swaps the per-context search for the paper's CSA→NM hybrid pipeline
+(or any :func:`repro.core.strategy.make_strategy` spec) at the same total
+measurement budget; the spec is stamped on every committed record.
 """
 from __future__ import annotations
 
@@ -145,8 +148,12 @@ def _list_grid(cases, db, interpret: bool) -> int:
         rec, exact = db.lookup(key)
         case_id = f"{name}/{label}"
         if exact:
+            # same convention as the run summary: the default CSA search is
+            # not news, only a non-default strategy earns the column
+            strat = (f" strategy={rec.strategy}"
+                     if rec.strategy and rec.strategy != "csa" else "")
             print(f"  {case_id:<42} HIT   best={rec.point} "
-                  f"cost={rec.cost * 1e3:.2f}ms source={rec.source}")
+                  f"cost={rec.cost * 1e3:.2f}ms source={rec.source}{strat}")
         elif rec is not None and key.distance(rec.key) != float("inf"):
             print(f"  {case_id:<42} warm  neighbor={rec.point} "
                   f"(shapes {rec.key.shapes()})")
@@ -184,6 +191,12 @@ def main(argv=None) -> int:
         "--measure", choices=("adaptive", "fixed"), default=None,
         help="measurement policy: adaptive racing + roofline prefilter, or the "
              "classic fixed-repeat loop (default: REPRO_TUNE_MEASURE or adaptive)",
+    )
+    ap.add_argument(
+        "--strategy", type=str, default=None, metavar="SPEC",
+        help="search strategy spec per context, e.g. 'csa+nm' (the paper's "
+             "CSA→NM hybrid pipeline), 'csa:0.7+nm:0.3', or 'csa|nm' "
+             "(portfolio); default: plain CSA — same total tell budget either way",
     )
     args = ap.parse_args(argv)
 
@@ -231,6 +244,7 @@ def main(argv=None) -> int:
             source="pretune",
             measure=args.measure,
             measure_stats=mstats,
+            strategy=args.strategy,
         )
         dt = time.perf_counter() - t0
         for k in totals:
@@ -240,6 +254,7 @@ def main(argv=None) -> int:
                   file=sys.stderr)
             continue
         crashed = f" crashed={rec.crashed}" if rec.crashed else ""
+        strat = f" strategy={rec.strategy}" if rec.strategy and rec.strategy != "csa" else ""
         raced = ""
         if mstats.get("mode") == "adaptive" and mstats.get("measured"):
             raced = (f" reps={mstats['reps']}"
@@ -247,7 +262,7 @@ def main(argv=None) -> int:
                      f" pruned={mstats['pruned_roofline']}")
         print(
             f"  {name}/{label}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
-            f"evals={rec.evals}{crashed}{raced} ({dt:.1f}s)"
+            f"evals={rec.evals}{crashed}{strat}{raced} ({dt:.1f}s)"
         )
         n_done += 1
     db.save()

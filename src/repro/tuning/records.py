@@ -197,10 +197,12 @@ class TuningRecord:
 
     ``cost_std`` / ``repeats_spent`` carry the measurement confidence of the
     stored cost (standard deviation over the repetitions the measurement
-    engine actually spent on the best point).  Both are optional: records
-    written before the adaptive measurement engine — and costs delivered by
-    user cost functions — load as ``None``, which every consumer must treat
-    as "confidence unknown"."""
+    engine actually spent on the best point).  ``strategy`` is the search
+    strategy spec that produced the record (``"csa"``, ``"csa+nm"``,
+    ``"csa|nm"``, ... — see :func:`repro.core.strategy.make_strategy`).
+    All three are optional: records written before these fields existed —
+    and costs delivered by user cost functions — load as ``None``, which
+    every consumer must treat as "unknown"."""
 
     key: TuningKey
     point: dict
@@ -211,6 +213,7 @@ class TuningRecord:
     crashed: int = 0  # distinct candidates that failed during the search
     cost_std: Optional[float] = None  # std over the best point's measured reps
     repeats_spent: Optional[int] = None  # reps behind the stored cost
+    strategy: Optional[str] = None  # search strategy spec behind the record
 
     def to_json(self) -> dict:
         return {
@@ -223,12 +226,14 @@ class TuningRecord:
             "crashed": self.crashed,
             "cost_std": self.cost_std,
             "repeats_spent": self.repeats_spent,
+            "strategy": self.strategy,
         }
 
     @classmethod
     def from_json(cls, d: Mapping[str, Any]) -> "TuningRecord":
         cost_std = d.get("cost_std")
         repeats_spent = d.get("repeats_spent")
+        strategy = d.get("strategy")
         return cls(
             key=TuningKey.from_json(d["key"]),
             point=dict(d["point"]),
@@ -239,4 +244,5 @@ class TuningRecord:
             crashed=int(d.get("crashed", 0)),
             cost_std=float(cost_std) if cost_std is not None else None,
             repeats_spent=int(repeats_spent) if repeats_spent is not None else None,
+            strategy=str(strategy) if strategy is not None else None,
         )

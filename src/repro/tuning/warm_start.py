@@ -94,4 +94,5 @@ def record_from(autotuner, key, *, source: str = "online") -> Optional[TuningRec
         crashed=int(getattr(autotuner, "num_crashed", 0)),
         cost_std=cost_std,
         repeats_spent=repeats_spent,
+        strategy=getattr(autotuner, "strategy", None),
     )

@@ -15,6 +15,7 @@ from repro.core import (
     IntDim,
     LogIntDim,
     NelderMead,
+    RandomSearch,
     SearchSpace,
     TunedStep,
 )
@@ -173,6 +174,77 @@ def test_grid_search_through_autotuning():
     at = Autotuning(0, 9, ignore=0, optimizer=GridSearch(1, points_per_dim=10))
     at.entire_exec(lambda p: abs(p - 6))
     assert at.best_point["p0"] == 6
+
+
+# ---------------------------------------- grid/random reset-contract parity
+def test_grid_search_reset_levels_match_csa_contract():
+    """GridSearch reset parity: level 1 keeps the best *coordinates* but
+    drops the stale energy (CSA's drift-reset contract); level >= 2 is
+    complete."""
+    import numpy as np
+
+    gs = GridSearch(1, points_per_dim=8)
+    while not gs.is_end():
+        gs.tell([float((z[0] - 0.5) ** 2) for z in gs.ask()])
+    best = gs.best_solution.copy()
+    assert np.isfinite(gs.best_cost)
+    gs.reset(1)
+    assert not gs.is_end()
+    np.testing.assert_array_equal(gs.best_solution, best)  # coordinates kept
+    assert not np.isfinite(gs.best_cost)  # stale energy dropped
+    # the point re-proves itself against post-drift costs
+    while not gs.is_end():
+        gs.tell([float((z[0] + 0.5) ** 2) for z in gs.ask()])
+    assert abs(gs.best_solution[0] + 0.5) < 0.2
+    gs.reset(2)
+    assert not np.isfinite(gs.best_cost)
+
+
+def test_random_search_reset_restores_cold_budget():
+    """RandomSearch reset parity: a warm-start-shrunk budget never compounds
+    across resets (every level restores the cold sample count), and level 1
+    keeps coordinates / drops energy."""
+    import numpy as np
+
+    rs = RandomSearch(1, max_iter=16, seed=0)
+    assert rs.shrink_budget(0.5)
+    n = 0
+    while not rs.is_end():
+        b = rs.ask()
+        if not b:
+            break
+        rs.tell([float(z[0] ** 2) for z in b])
+        n += len(b)
+    assert n == 8  # shrunk budget honored
+    best = rs.best_solution.copy()
+    rs.reset(1)
+    np.testing.assert_array_equal(rs.best_solution, best)
+    assert not np.isfinite(rs.best_cost)
+    n = 0
+    while not rs.is_end():
+        b = rs.ask()
+        if not b:
+            break
+        rs.tell([float(z[0] ** 2) for z in b])
+        n += len(b)
+    assert n == 16  # cold budget restored at level >= 1
+    # level 2 replays the seed's stream: same points as a fresh instance
+    rs.reset(2)
+    fresh = RandomSearch(1, max_iter=16, seed=0)
+    np.testing.assert_array_equal(
+        np.asarray(rs.ask()), np.asarray(fresh.ask())
+    )
+
+
+def test_random_search_level0_reset_keeps_found_solution():
+    import numpy as np
+
+    rs = RandomSearch(1, max_iter=4, seed=3)
+    while not rs.is_end():
+        rs.tell([0.25 for _ in rs.ask()])
+    rs.reset(0)
+    assert rs.best_cost == 0.25  # level 0 retains found solutions (§2.2)
+    assert not rs.is_end()
 
 
 @settings(max_examples=20, deadline=None)

@@ -208,6 +208,59 @@ def test_batch_driver_records_measure_meta_and_revisits_after_reset():
     assert meta["repeats_spent"] >= 1
 
 
+def test_measure_meta_survives_pipeline_stage_transition():
+    """A point really measured by an earlier pipeline stage must keep its
+    measurement meta — and its measured cost — when a later stage revisits
+    it and the engine's roofline prefilter answers with the optimistic
+    analytic bound (NM must not 'improve' on CSA's real measurement)."""
+    from repro.core import NelderMead, Pipeline
+
+    space = SearchSpace([IntDim("k", 0, 31)])
+    pipe = Pipeline(
+        [CSA(1, num_opt=4, max_iter=3, seed=0),
+         NelderMead(1, error=0.0, max_iter=100, seed=0)],
+        (0.5, 0.5), budget=24,
+    )
+    # cache=False: revisits genuinely reach the measurement layer, which is
+    # exactly when a stale prune could clobber a real measurement
+    at = Autotuning(space=space, ignore=0, optimizer=pipe, cache=False)
+    seen: set = set()
+
+    def true_cost(p):
+        return 1.0 + abs(p["k"] - 7) * 0.1
+
+    def measure_batch(points):
+        out = []
+        for p in points:
+            key = tuple(sorted(p.items()))
+            if key in seen:
+                # revisit: the engine prunes against its (better) incumbent,
+                # charging an optimistic lower bound with zero reps
+                out.append(MeasureResult(cost=0.5 * true_cost(p), pruned="roofline"))
+            else:
+                seen.add(key)
+                out.append(
+                    MeasureResult(cost=true_cost(p), cost_std=0.01, repeats_spent=3)
+                )
+        return out
+
+    at.entire_exec_batch(measure_batch)
+    keys = [space.key(p) for p, _ in at.history]
+    revisited = {k for k in keys if keys.count(k) > 1}
+    assert revisited  # the NM stage revisited a CSA-measured point
+    # every delivered cost is the *measured* one — the optimistic half-price
+    # bound never reached the optimizer or the history
+    for p, c in at.history:
+        assert c == pytest.approx(true_cost(p))
+    # ...and the measured meta survived the stage transition
+    for p, _ in at.history:
+        if space.key(p) in revisited:
+            meta = at.measurement_meta(p)
+            assert meta is not None
+            assert meta["pruned"] is None
+            assert meta["repeats_spent"] == 3
+
+
 def test_measurements_count_reps_actually_spent():
     space = SearchSpace([IntDim("k", 0, 3)])
     at = Autotuning(space=space, ignore=0,

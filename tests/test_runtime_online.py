@@ -607,6 +607,76 @@ def test_warm_reset_seeds_and_halves_budget():
     assert at.best_point == {"p": 9}
 
 
+def test_drift_level1_retunes_through_nm_refinement_stage(tmp_path):
+    """With a staged strategy, environment drift (level 1) re-tunes through
+    the pipeline's final NM refinement stage alone, warm-seeded at the
+    deployed point — and commits the refreshed result with the strategy's
+    provenance.  Deterministic: analytic costs, seeded search."""
+    from repro.core import Pipeline
+
+    db = TuningDB(str(tmp_path / "db.json"))
+    sp = _space()
+    key = make_key("unit", args=(np.zeros((64, 64), np.float32),), space=sp)
+    at = Autotuning(space=sp, ignore=0, strategy="csa+nm", num_opt=3,
+                    max_iter=8, seed=0, cache=True, db=db, key=key)
+    pipe = at.optimizer
+    assert isinstance(pipe, Pipeline)
+    t = OnlineTuner(at, epsilon=0.5, warm_frac=1.0,
+                    drift=DriftDetector(window=4, min_samples=2))
+
+    _drive_search(t, lambda p: (p["p"] - 9) ** 2 * 0.01 + 1.0, exploit_cost=1.0)
+    assert t.finished
+    deployed = at.best_point
+    assert deployed == {"p": 9}
+    assert db.get(key).strategy == "csa+nm"
+
+    # healthy steady state -> baseline; then the environment degrades
+    for _ in range(6):
+        t.observe(t.begin(), 1.0)
+    level = 0
+    for _ in range(50):
+        level = t.observe(t.begin(), 2.0)
+        if level:
+            break
+    assert level == 1
+    # the pipeline re-entered through its final (NM) refinement stage...
+    assert pipe.refining
+    assert pipe.stage_index == len(pipe.stages) - 1
+    assert t.events[-1]["refined"] is True
+    # ...warm-seeded at the deployed point: it is the first candidate retried
+    assert at.point == deployed
+
+    # the optimum moved two steps within the same basin; the NM-only
+    # re-search finds it without a global re-exploration
+    retune = {"n": 0}
+
+    def cost2(p):
+        retune["n"] += 1
+        return (p["p"] - 11) ** 2 * 0.01 + 2.0
+
+    _drive_search(t, cost2, exploit_cost=2.0)
+    assert t.finished
+    assert retune["n"] > 0
+    # the refinement episode is a fraction of the cold budget (24 tells)
+    assert retune["n"] <= pipe.stages[-1].get_num_points() + 8
+    assert at.best_point == {"p": 11}
+    rec = db.get(key)
+    assert rec is not None and rec.point == {"p": 11}
+    assert rec.source == "online" and rec.strategy == "csa+nm"
+
+    # a severe (level 2) drift restarts the FULL pipeline instead
+    for _ in range(6):
+        t.observe(t.begin(), 2.0)
+    level = 0
+    for _ in range(50):
+        level = t.observe(t.begin(), 50.0)
+        if level:
+            break
+    assert level == 2
+    assert not pipe.refining  # workload shift: back to the global stage
+    assert pipe.stage_index == 0
+
+
 # -------------------------------------------------------- TunedStep adaptive
 def test_tuned_step_adaptive_mode_wiring():
     calls = []
