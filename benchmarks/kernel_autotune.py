@@ -44,7 +44,7 @@ def run(m=256, n=256, k=256, verbose=True) -> dict:
 
     at = Autotuning(
         space=space, ignore=0,
-        optimizer=CSA(3, num_opt=4, max_iter=6, seed=0), cache=True,
+        search=CSA(3, num_opt=4, max_iter=6, seed=0), cache=True,
     )
     t0 = time.perf_counter()
     at.entire_exec(lambda bm, bn, bk: measure(bm, bn, bk))

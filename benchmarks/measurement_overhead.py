@@ -83,7 +83,7 @@ def _driver(seed: int, num_opt: int, max_iter: int):
     return Autotuning(
         space=space,
         ignore=0,
-        optimizer=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
+        search=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
         cache=True,
     )
 

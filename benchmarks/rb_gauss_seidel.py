@@ -90,7 +90,7 @@ def run(n: int = 512, iters: int = 60, seed: int = 0, verbose: bool = True) -> d
         ("csa_entire", CSA(1, num_opt=4, max_iter=6, seed=seed)),
         ("nm_entire", NelderMead(1, error=0.0, max_iter=18, seed=seed)),
     ]:
-        at = Autotuning(space=space, ignore=1, optimizer=opt, cache=True)
+        at = Autotuning(space=space, ignore=1, search=opt, cache=True)
         t0 = time.perf_counter()
         u = u0
 
@@ -111,7 +111,7 @@ def run(n: int = 512, iters: int = 60, seed: int = 0, verbose: bool = True) -> d
     # --- Single Iteration mode (paper Alg. 6): tuning rides the solve ------
     at = Autotuning(
         space=space, ignore=1,
-        optimizer=CSA(1, num_opt=4, max_iter=6, seed=seed), cache=True,
+        search=CSA(1, num_opt=4, max_iter=6, seed=seed), cache=True,
     )
     u = u0
     t0 = time.perf_counter()

@@ -31,6 +31,7 @@ BENCHES = [
     "tuning_warmstart",  # tuning DB: cold vs near-miss vs exact-replay cost
     "tuning_throughput",  # batched (ask/tell + AOT fan-out) vs sequential tuning
     "measurement_overhead",  # adaptive racing vs fixed repeats (deterministic)
+    "fleet_sharding",  # fleet: ShardedPortfolio wall-clock vs serial Portfolio
     "online_adaptation",  # runtime: adaptation latency/regret on a workload shift
     "step_autotune",  # §2.4: exec modes on a real train step
     "grad_compression",  # DESIGN §7: compressed DP reduction

@@ -109,11 +109,11 @@ def run(seeds=range(8), budget: int = 320, dims=(2, 4), verbose: bool = True) ->
         at.entire_exec(lambda p: (p - 31) ** 2)
         eq[f"csa_ignore{ignore}"] = (at.num_measurements, 5 * (ignore + 1) * 4)
         nm = NelderMead(1, error=0.0, max_iter=12)
-        at = Autotuning(0, 63, ignore=ignore, optimizer=nm)
+        at = Autotuning(0, 63, ignore=ignore, search=nm)
         at.entire_exec(lambda p: (p - 31) ** 2)
         eq[f"nm_ignore{ignore}"] = (at.num_measurements, 12 * (ignore + 1))
         at = Autotuning(
-            0, 63, ignore=ignore, dim=1, strategy="csa+nm", num_opt=4, max_iter=5
+            0, 63, ignore=ignore, dim=1, search="csa+nm", num_opt=4, max_iter=5
         )
         at.entire_exec(lambda p: (p - 31) ** 2)
         eq[f"pipeline_ignore{ignore}"] = (at.num_measurements, 5 * (ignore + 1) * 4)

@@ -86,7 +86,7 @@ def sequential_tune(name, *args, db, interpret=True, num_opt=3, max_iter=3,
     at = Autotuning(
         space=space,
         ignore=0,
-        optimizer=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
+        search=CSA(len(space), num_opt=num_opt, max_iter=max_iter, seed=seed),
         cache=True,
         db=db,
         key=key,

@@ -33,7 +33,7 @@ def make_fn(block):  # smaller blocks do redundant passes — a runtime knob
 fns = {}
 at = Autotuning(space=SearchSpace([LogIntDim("block", 32, 512)]),
                 ignore=1,  # first call per candidate absorbs XLA compile
-                optimizer=CSA(1, num_opt=4, max_iter=6, seed=0), cache=True)
+                search=CSA(1, num_opt=4, max_iter=6, seed=0), cache=True)
 while not at.finished:
     knobs = at.start()  # paper start()/end() runtime brackets
     fn = fns.setdefault(knobs["block"], make_fn(knobs["block"]))

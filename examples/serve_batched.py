@@ -58,7 +58,7 @@ def main():
     # PATSMA rides the serving loop: each tuning iteration = one decode call
     space = SearchSpace([ChoiceDim("k", (1, 2, 4, 8, 16))])
     at = Autotuning(space=space, ignore=1,
-                    optimizer=CSA(1, num_opt=3, max_iter=5, seed=0), cache=True)
+                    search=CSA(1, num_opt=3, max_iter=5, seed=0), cache=True)
     decoders = {}
     pos = jnp.int32(P)
     emitted = 0

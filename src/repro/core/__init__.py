@@ -6,6 +6,7 @@ search-space codecs, and the cost backends used across the framework.
 from .autotuning import Autotuning
 from .costs import (
     TPU_V5E,
+    CachePartition,
     ExecutableCache,
     HardwareSpec,
     RooflineTerms,
@@ -33,6 +34,7 @@ from .strategy import (
     Pipeline,
     Portfolio,
     SearchStrategy,
+    cull_laggards,
     make_strategy,
     strategy_label,
 )
@@ -48,6 +50,7 @@ __all__ = [
     "SearchStrategy",
     "Pipeline",
     "Portfolio",
+    "cull_laggards",
     "make_strategy",
     "strategy_label",
     "SearchSpace",
@@ -64,6 +67,7 @@ __all__ = [
     "resolve_measure_policy",
     "time_rep",
     "ExecutableCache",
+    "CachePartition",
     "aot_compile",
     "compile_fanout",
     "HardwareSpec",

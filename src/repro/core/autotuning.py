@@ -32,6 +32,7 @@ When tuning finishes the result is committed back to the DB automatically.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -55,29 +56,35 @@ def _block(x):
 
 
 def _known_std(record) -> Optional[float]:
-    """A record's measured standard deviation, or ``None`` when it carries no
-    *meaningful* confidence — absent fields (pre-engine records) and
-    single-rep measurements (whose std of 0.0 is unknown, not perfect)."""
-    if record.cost_std is None or (record.repeats_spent or 0) <= 1:
-        return None
-    return float(record.cost_std)
+    """A record's meaningful measurement std (see TuningRecord.known_std)."""
+    return record.known_std()
 
 
 class Autotuning:
     """Paper API::
 
         Autotuning(min, max, ignore, dim, num_opt, max_iter)      # default CSA
-        Autotuning(min, max, ignore, optimizer=<NumericalOptimizer>)
+        Autotuning(min, max, ignore, search=<spec | optimizer | strategy>)
 
-    plus the extended forms ``Autotuning(space=SearchSpace(...), ...)`` and
-    ``Autotuning(..., strategy="csa+nm")`` — a search-strategy spec parsed by
-    :func:`repro.core.strategy.make_strategy` (the paper's CSA→NM hybrid as
-    a staged pipeline, portfolios, ...) over the same ``num_opt * max_iter``
-    tell budget the default CSA consumes.  ``optimizer=`` remains the
-    single-method shim and is mutually exclusive with ``strategy=``; the
-    resolved spec is exposed as :attr:`strategy` and stamped on committed
-    tuning records.  Decoded points are dicts ``{dim_name: value}``; the
-    paper-style vector form is available via ``point_vector``.
+    plus the extended form ``Autotuning(space=SearchSpace(...), ...)``.
+
+    ``search=`` is the single knob picking the search method.  It accepts
+
+    * a **spec string** (``"csa+nm"``, ``"csa:0.7+nm:0.3"``, ``"csa|nm"``)
+      parsed by :func:`repro.core.strategy.make_strategy` — the paper's
+      CSA→NM hybrid as a staged pipeline, portfolios, ... — over the same
+      ``num_opt * max_iter`` tell budget the default CSA consumes;
+    * a raw :class:`~repro.core.optimizer.NumericalOptimizer` instance;
+    * any :data:`~repro.core.strategy.SearchStrategy` object (pipelines and
+      portfolios are themselves optimizers).
+
+    The legacy ``optimizer=`` / ``strategy=`` kwargs remain as deprecated
+    aliases of ``search=`` (they emit a ``DeprecationWarning`` and stay
+    trajectory-identical); passing more than one of the three is an error.
+    The resolved spec is exposed as :attr:`strategy` and stamped on
+    committed tuning records.  Decoded points are dicts
+    ``{dim_name: value}``; the paper-style vector form is available via
+    ``point_vector``.
     """
 
     def __init__(
@@ -89,6 +96,7 @@ class Autotuning:
         num_opt: int = 4,
         max_iter: int = 20,
         *,
+        search: Any = None,
         optimizer: Optional[NumericalOptimizer] = None,
         strategy: Any = None,
         space: Optional[SearchSpace] = None,
@@ -107,17 +115,30 @@ class Autotuning:
             min, max, dim, integer=integer
         )
         d = len(self.space)
-        if strategy is not None and optimizer is not None:
-            raise ValueError("pass either optimizer= or strategy=, not both")
-        if isinstance(strategy, str):
+        given = [n for n, v in (
+            ("search", search), ("optimizer", optimizer), ("strategy", strategy)
+        ) if v is not None]
+        if len(given) > 1:
+            raise ValueError(
+                f"pass a single search method, got {' and '.join(given)} "
+                "(optimizer= and strategy= are deprecated aliases of search=)"
+            )
+        if optimizer is not None or strategy is not None:
+            alias = "optimizer" if optimizer is not None else "strategy"
+            warnings.warn(
+                f"Autotuning({alias}=...) is deprecated; pass the same value "
+                "as search= (spec string, optimizer, or SearchStrategy)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            search = optimizer if optimizer is not None else strategy
+        if isinstance(search, str):
             from .strategy import make_strategy
 
-            optimizer = make_strategy(
-                strategy, d, num_opt=num_opt, max_iter=max_iter, seed=seed
+            search = make_strategy(
+                search, d, num_opt=num_opt, max_iter=max_iter, seed=seed
             )
-        elif strategy is not None:  # a SearchStrategy / NumericalOptimizer object
-            optimizer = strategy
-        self.optimizer = optimizer if optimizer is not None else CSA(
+        self.optimizer = search if search is not None else CSA(
             d, num_opt=num_opt, max_iter=max_iter, seed=seed
         )
         # provenance spec stamped on committed TuningRecords (records.strategy)

@@ -34,6 +34,7 @@ __all__ = [
     "TPU_V5E",
     "RuntimeCost",
     "ExecutableCache",
+    "CachePartition",
     "aot_compile",
     "compile_fanout",
     "roofline_terms",
@@ -240,6 +241,46 @@ class ExecutableCache:
             self._entries.clear()
             self._built.clear()
             self.hits = self.misses = self.recompiles = self.evictions = 0
+
+    def partition(self, tag: Hashable) -> "CachePartition":
+        """A namespaced view of this cache: every key is transparently
+        prefixed with ``tag``.  Fleet workers pinned to different devices
+        compile the *same* candidate into device-specific executables —
+        partitioned views keep those from colliding under one key while
+        still sharing the process-wide LRU budget, stats, and per-key
+        build deduplication."""
+        return CachePartition(self, tag)
+
+
+class CachePartition:
+    """A key-prefixed view over a shared :class:`ExecutableCache` (see
+    :meth:`ExecutableCache.partition`).  Same surface as the base cache;
+    ``stats()``/``clear()`` act on the *shared* underlying cache."""
+
+    def __init__(self, base: ExecutableCache, tag: Hashable) -> None:
+        self.base = base
+        self.tag = tag
+
+    def _key(self, key: Hashable) -> Hashable:
+        return ("__partition__", self.tag, key)
+
+    def get_or_build(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        return self.base.get_or_build(self._key(key), build)
+
+    def peek(self, key: Hashable, default: Any = None) -> Any:
+        return self.base.peek(self._key(key), default)
+
+    def partition(self, tag: Hashable) -> "CachePartition":
+        return CachePartition(self.base, (self.tag, tag))
+
+    def stats(self) -> dict:
+        return self.base.stats()
+
+    def clear(self) -> None:
+        self.base.clear()
+
+    def __len__(self) -> int:
+        return len(self.base)
 
 
 def compile_fanout(

@@ -54,6 +54,7 @@ __all__ = [
     "SearchStrategy",
     "Pipeline",
     "Portfolio",
+    "cull_laggards",
     "make_strategy",
     "strategy_label",
 ]
@@ -63,6 +64,40 @@ __all__ = [
 #: subclass NumericalOptimizer so they satisfy it by construction and drop
 #: into every existing driver (Autotuning, OnlineTuner, ContextRouter).
 SearchStrategy = NumericalOptimizer
+
+def cull_laggards(
+    active: Sequence[int],
+    member_bests: Sequence[float],
+    noise: NoiseEstimate,
+    margin: float = 0.5,
+) -> List[int]:
+    """The successive-halving cull decision, as a pure function.
+
+    Given the indices of the members still racing and every member's best
+    cost so far, return the indices to cull *now*: members whose best is
+    statistically separated from the leader's — beyond the noise floor
+    widened by ``margin`` — worst first, at most half the field per check,
+    never the leader.  Shared verbatim by :class:`Portfolio` (serial
+    round-robin driver) and :class:`repro.tuning.fleet.ShardedPortfolio`
+    (one worker per member), so the two drivers make identical cull
+    decisions from identical scoreboards.
+    """
+    if len(active) < 2:
+        return []
+    order = sorted(active, key=lambda i: member_bests[i])
+    leader_best = member_bests[order[0]]
+    if not np.isfinite(leader_best):
+        return []
+    line = leader_best + noise.floor(leader_best) * (1.0 + margin)
+    may_cull = len(active) // 2  # successive halving: keep ⌈n/2⌉
+    culled: List[int] = []
+    for i in reversed(order[1:]):  # worst first; never the leader
+        if len(culled) >= may_cull:
+            break
+        if member_bests[i] > line:
+            culled.append(i)
+    return culled
+
 
 #: default seeding radius when a stage hands off to the next (normalized
 #: coords) — the "simplex-radius neighborhood" of the incumbent.  Wider than
@@ -596,19 +631,10 @@ class Portfolio(NumericalOptimizer):
             return
         for i in self._active:
             self._since_check[i] = 0
-        order = sorted(self._active, key=lambda i: self._member_best[i])
-        leader_best = self._member_best[order[0]]
-        if not np.isfinite(leader_best):
-            return
-        line = leader_best + self._noise.floor(leader_best) * (1.0 + self._margin)
-        may_cull = len(self._active) // 2  # successive halving: keep ⌈n/2⌉
-        culled = 0
-        for i in reversed(order[1:]):  # worst first; never the leader
-            if culled >= may_cull:
-                break
-            if self._member_best[i] > line:
-                self._active.remove(i)
-                culled += 1
+        for i in cull_laggards(
+            self._active, self._member_best, self._noise, self._margin
+        ):
+            self._active.remove(i)
         if self._turn >= len(self._active):
             self._turn = 0
 

@@ -51,6 +51,7 @@ class TunedStep:
         ignore: int = 1,
         num_opt: int = 4,
         max_iter: int = 10,
+        search=None,
         optimizer: Optional[NumericalOptimizer] = None,
         strategy: Optional[str] = None,
         cache: bool = True,
@@ -73,14 +74,19 @@ class TunedStep:
             from repro.tuning import make_key
 
             key = make_key(name, space=space, extra=key_extra)
+        given = [v for v in (search, optimizer, strategy) if v is not None]
+        if len(given) > 1:
+            raise ValueError(
+                "pass a single search method (optimizer= and strategy= are "
+                "aliases of search=)"
+            )
         self._factory = step_factory
         self.at = Autotuning(
             ignore=ignore,
             space=space,
             num_opt=num_opt,
             max_iter=max_iter,
-            optimizer=optimizer,
-            strategy=strategy,
+            search=given[0] if given else None,
             cache=cache,
             seed=seed,
             verbose=verbose,

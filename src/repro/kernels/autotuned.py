@@ -302,6 +302,7 @@ def tune_call(
     bound_fn: Optional[Callable] = None,
     measure_stats: Optional[dict] = None,
     strategy: Optional[str] = None,
+    warm_start: bool = True,
     **kwargs,
 ):
     """Run a measured PATSMA search for this call context and commit the
@@ -351,6 +352,12 @@ def tune_call(
     A :class:`~repro.core.strategy.Portfolio` strategy reuses the adaptive
     engine's calibrated noise floor for its statistically-separated-lead
     culls.  The spec is stamped on the committed record (``strategy``).
+
+    ``warm_start=False`` disables the DB neighbor seeding, making each
+    context's search independent of what else the DB holds — the fleet's
+    shard-equivalence contract (a sharded sweep must reproduce the
+    unsharded sweep's points) needs searches whose trajectories do not
+    depend on the sweep's visiting order.
     """
     import jax
 
@@ -504,7 +511,7 @@ def tune_call(
     at = Autotuning(
         space=space,
         ignore=0,  # RuntimeCost already discards warmup runs
-        strategy=strategy,  # None -> the classic default CSA search
+        search=strategy,  # None -> the classic default CSA search
         num_opt=num_opt,
         max_iter=max_iter,
         seed=seed,
@@ -512,6 +519,7 @@ def tune_call(
         verbose=verbose,
         db=db,
         key=key,
+        warm_start=warm_start,
         db_source=source,
     )
     at.entire_exec_batch(measure_batch)

@@ -127,7 +127,7 @@ def main():
     max_iter = max(2, args.budget // args.num_opt)
     at = Autotuning(
         space=space, ignore=0,
-        optimizer=CSA(len(space), num_opt=args.num_opt, max_iter=max_iter, seed=0),
+        search=CSA(len(space), num_opt=args.num_opt, max_iter=max_iter, seed=0),
         cache=True, verbose=True,
     )
     tuner = OnlineTuner(at, epsilon=1.0, drift=DriftDetector(window=4, min_samples=3))

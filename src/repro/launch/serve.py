@@ -19,6 +19,12 @@ process with the same (arch, batch) context skips tuning entirely and
 decodes at the stored-best ``k`` from the first token.  ``--no-tune --db``
 replays that stored best statically (no exploration, no drift handling);
 ``--no-tune`` without a DB record falls back to ``k=1``.
+
+``--db`` is repeatable: extra paths are fleet shard DBs (``repro.tune
+pretune --shard i/n`` outputs) folded read-only into the first at startup
+with the fleet's keep-better resolver — serving a host straight off its
+fleet's shards without a separate ``repro.tune db merge`` step.  Only the
+first path is written back to.
 """
 import argparse
 import time
@@ -56,8 +62,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--no-tune", action="store_true")
-    ap.add_argument("--db", type=str, default=None,
-                    help="tuning DB path; persists the tuned decode k across runs")
+    ap.add_argument("--db", type=str, default=None, action="append",
+                    help="tuning DB path; persists the tuned decode k across "
+                         "runs.  Repeatable: extra paths are fleet shard DBs "
+                         "merged (keep-better) into the first at startup")
     ap.add_argument("--epsilon", type=float, default=0.25,
                     help="explored fraction of decode chunks while tuning")
     args = ap.parse_args()
@@ -102,7 +110,14 @@ def main():
     # tuning context — a k=8-capable record says nothing about a 4-token job)
     ks = tuple(k for k in DECODE_KS if k <= args.gen) or (1,)
     space = SearchSpace([ChoiceDim("k", ks)])
-    db = TuningDB(args.db) if args.db else None
+    db = None
+    if args.db:
+        db = TuningDB(args.db[0])
+        if len(args.db) > 1:
+            from repro.tuning.fleet import merge_dbs
+
+            stats = merge_dbs(db, [TuningDB(p, autosave=False) for p in args.db[1:]])
+            print(f"merged {len(args.db) - 1} shard DB(s) into {args.db[0]}: {stats}")
     extra = {"arch": args.arch, "tiny": args.tiny, "batch": args.batch}
     key = make_key("serve/decode_k", space=space, extra=extra) if db else None
     pos = jnp.int32(P)
@@ -112,7 +127,7 @@ def main():
         # static serving still honours the DB: replay the stored-best k
         k_static = replay_decode_k(db, key, gen=args.gen)
         if db is not None and k_static != 1:
-            print(f"--no-tune: replaying stored decode k={k_static} from {args.db}")
+            print(f"--no-tune: replaying stored decode k={k_static} from {args.db[0]}")
         fn_static = make_multi(k_static).lower(params, token, states, pos).compile()
         emitted = 0
         t0 = time.perf_counter()

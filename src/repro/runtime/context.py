@@ -221,8 +221,9 @@ class ContextRouter:
             at = Autotuning(
                 space=space,
                 ignore=spec.ignore,
-                optimizer=opt,  # factory-built override, else strategy/CSA
-                strategy=spec.strategy if opt is None else None,
+                # factory-built optimizer override, else the route's strategy
+                # spec, else the default CSA
+                search=opt if opt is not None else spec.strategy,
                 num_opt=spec.num_opt,
                 max_iter=spec.max_iter,
                 seed=spec.seed,

@@ -1,0 +1,226 @@
+"""``python -m repro.tune`` — the umbrella CLI for the tuning fleet.
+
+One front door for every offline tuning workflow::
+
+    python -m repro.tune pretune --db tuned/cpu.json --smoke
+    python -m repro.tune pretune --db tuned/s0.json --smoke --shard 0/2
+    python -m repro.tune db merge --out tuned/all.json tuned/s0.json tuned/s1.json
+    python -m repro.tune db list --db tuned/all.json
+    python -m repro.tune db list --db tuned/all.json --grid --smoke
+    python -m repro.tune db diff tuned/all.json tuned/unsharded.json
+
+* ``pretune`` — the offline sweep (:mod:`repro.tuning.pretune`, every flag
+  forwarded unchanged; ``python -m repro.tuning.pretune`` remains a shim
+  over this subcommand).
+* ``db merge`` — fold shard DBs into one, resolving per-key conflicts with
+  the fleet's total-order keep-better rule
+  (:func:`repro.tuning.fleet.merge_dbs`): associative, order-independent,
+  and identical to what ``Autotuning.commit()`` would have kept.
+* ``db list`` — the records of a DB; ``--grid`` shows the registered
+  pretune grid with per-case hit status instead (absorbing the historical
+  ``pretune --list``), ``--shard i/n`` restricts either view to one fleet
+  shard.
+* ``db diff`` — compare two DBs' best points; exit 1 on any mismatch (the
+  CI shard-equivalence gate).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+__all__ = ["main"]
+
+_USAGE = """usage: python -m repro.tune <command> ...
+
+commands:
+  pretune            offline tuning sweep (see: pretune --help)
+  db merge           fold shard DBs into one (keep-better conflict resolution)
+  db list            show a DB's records (--grid: the pretune grid + hit status)
+  db diff            compare two DBs' best points; exit 1 on mismatch
+"""
+
+
+def _open_db(path: str, *, must_exist: bool = True, autosave: bool = True):
+    from repro.tuning import TuningDB
+
+    if must_exist and not os.path.exists(path):
+        raise FileNotFoundError(f"no tuning DB at {path}")
+    return TuningDB(path, autosave=autosave)
+
+
+# ------------------------------------------------------------------ db merge
+def _db_merge(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.tune db merge",
+        description="fold shard DBs into one, keep-better per key",
+    )
+    ap.add_argument("--out", required=True, help="destination DB (created/updated)")
+    ap.add_argument("sources", nargs="+", metavar="SRC", help="shard DB file(s)")
+    args = ap.parse_args(argv)
+
+    from repro.tuning import TuningDB
+    from repro.tuning.fleet import merge_dbs
+
+    try:
+        sources = [_open_db(p) for p in args.sources]
+    except FileNotFoundError as e:
+        print(f"db merge: {e}", file=sys.stderr)
+        return 2
+    dest = TuningDB(args.out, autosave=False)
+    stats = merge_dbs(dest, sources)
+    dest.save()
+    print(f"db merge: {stats} -> {args.out} ({len(dest)} records)")
+    return 0
+
+
+# ------------------------------------------------------------------- db list
+def _db_list(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.tune db list", description="show a tuning DB's records"
+    )
+    ap.add_argument("--db", default="tuned/cpu.json", help="DB file to read")
+    ap.add_argument(
+        "--grid", action="store_true",
+        help="list the registered pretune grid with per-case DB hit status "
+             "(exact hit / warm neighbor / cold) instead of raw records",
+    )
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --grid: the smoke grid (CI lane)")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="with --grid: fingerprint compiled (non-interpret) contexts")
+    ap.add_argument(
+        "--shard", type=str, default=None, metavar="I/N",
+        help="restrict to the contexts of one fleet shard",
+    )
+    args = ap.parse_args(argv)
+
+    from repro.tuning import TuningDB
+
+    db = TuningDB(args.db)
+    shard = None
+    if args.shard is not None:
+        from repro.tuning.fleet import parse_shard
+
+        shard = parse_shard(args.shard)
+
+    if args.grid:
+        from repro.tuning.pretune import _cases, _list_grid, _shard_filter
+
+        cases = _cases(args.smoke, abstract=True)
+        if shard is not None:
+            cases = _shard_filter(cases, args.smoke, None, None, shard,
+                                  interpret=not args.no_interpret)
+        return _list_grid(cases, db, interpret=not args.no_interpret)
+
+    records = db.records()
+    if shard is not None:
+        index, num = shard
+        records = [r for r in records if r.key.shard(num) == index]
+    where = f" shard {shard[0]}/{shard[1]}" if shard is not None else ""
+    print(f"{args.db}: {len(records)} records{where}")
+    for rec in sorted(records, key=lambda r: r.key.encode()):
+        shapes = rec.key.shapes()
+        conf = (f" ±{rec.cost_std * 1e3:.2f}ms(n={rec.repeats_spent})"
+                if rec.known_std() is not None else "")
+        strat = f" strategy={rec.strategy}" if rec.strategy else ""
+        print(
+            f"  {rec.key.name:<18} {str(shapes):<34} best={rec.point} "
+            f"cost={rec.cost * 1e3:.3f}ms{conf} source={rec.source}{strat}"
+        )
+    return 0
+
+
+# ------------------------------------------------------------------- db diff
+def _db_diff(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.tune db diff",
+        description="compare two DBs' best points; exit 1 on any mismatch",
+    )
+    ap.add_argument("a", metavar="A", help="first DB file")
+    ap.add_argument("b", metavar="B", help="second DB file")
+    ap.add_argument(
+        "--costs", action="store_true",
+        help="also require equal stored costs (default: points only — costs "
+             "are measurement-noisy unless both runs used --cost analytic)",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        da, db_ = _open_db(args.a), _open_db(args.b)
+    except FileNotFoundError as e:
+        print(f"db diff: {e}", file=sys.stderr)
+        return 2
+    ka = {r.key.encode(): r for r in da.records()}
+    kb = {r.key.encode(): r for r in db_.records()}
+    bad = 0
+    for k in sorted(set(ka) | set(kb)):
+        ra, rb = ka.get(k), kb.get(k)
+        if ra is None or rb is None:
+            side = args.b if ra is None else args.a
+            rec = rb if ra is None else ra
+            print(f"  only in {side}: {rec.key.name} {rec.key.shapes()}")
+            bad += 1
+        elif ra.point != rb.point:
+            print(
+                f"  point mismatch: {ra.key.name} {ra.key.shapes()}: "
+                f"{ra.point} (cost={ra.cost:.6g}) != {rb.point} (cost={rb.cost:.6g})"
+            )
+            bad += 1
+        elif args.costs and ra.cost != rb.cost:
+            print(
+                f"  cost mismatch: {ra.key.name} {ra.key.shapes()}: "
+                f"{ra.cost:.6g} != {rb.cost:.6g}"
+            )
+            bad += 1
+    if bad:
+        print(f"db diff: {bad} mismatch(es) between {args.a} and {args.b}")
+        return 1
+    print(f"db diff: {args.a} and {args.b} agree on {len(ka)} records")
+    return 0
+
+
+def _db(argv) -> int:
+    if not argv or argv[0] in ("-h", "--help"):
+        print("usage: python -m repro.tune db {merge,list,diff} ...")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "merge":
+        return _db_merge(rest)
+    if cmd == "list":
+        return _db_list(rest)
+    if cmd == "diff":
+        return _db_diff(rest)
+    print(f"repro.tune db: unknown subcommand {cmd!r}", file=sys.stderr)
+    print("usage: python -m repro.tune db {merge,list,diff} ...", file=sys.stderr)
+    return 2
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print(_USAGE, file=sys.stderr)
+        return 2
+    if argv[0] in ("-h", "--help"):
+        print(_USAGE)
+        return 0
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "pretune":
+        # forwarded wholesale: the sweep owns its own (large) flag surface
+        from repro.tuning.pretune import main as pretune_main
+
+        return pretune_main(rest, prog="repro.tune pretune")
+    if cmd == "db":
+        return _db(rest)
+    print(f"repro.tune: unknown command {cmd!r}", file=sys.stderr)
+    print(_USAGE, file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    try:
+        code = main()
+    except BrokenPipeError:  # e.g. `... db list | head` closing the pipe
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        code = 0
+    raise SystemExit(code)

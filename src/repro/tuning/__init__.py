@@ -1,16 +1,38 @@
-"""Persistent tuning store: context-keyed records of PATSMA search results.
+"""The unified tuning surface: persistence, search, and the distributed fleet.
 
 The paper's "Entire Execution" mode re-pays the full evaluation budget every
-launch; this package amortizes it across processes.  Results are keyed by a
-context fingerprint — (name, input shapes+dtypes, search-space hash, jax
-backend, device kind) — and stored in a versioned JSON DB with atomic writes.
+launch; this package amortizes it across processes — and, with the fleet
+layer, across devices and hosts.  Results are keyed by a context fingerprint
+— (name, input shapes+dtypes, search-space hash, jax backend, device kind) —
+and stored in a versioned JSON DB with atomic writes.
 
 * :mod:`repro.tuning.records`    — fingerprints + record schema
 * :mod:`repro.tuning.db`         — the on-disk database
 * :mod:`repro.tuning.warm_start` — exact-hit replay / neighbor seeding policy
-* :mod:`repro.tuning.pretune`    — offline sweep CLI (``python -m repro.tuning.pretune``)
+* :mod:`repro.tuning.fleet`      — sharded pretuning, order-independent DB
+  merging, and the :class:`~repro.tuning.fleet.ShardedPortfolio` race
+* :mod:`repro.tuning.pretune`    — offline sweep CLI (``python -m repro.tune
+  pretune``; ``python -m repro.tuning.pretune`` is a compatibility shim)
+
+This module is also the package's *facade*: the handful of names a tuning
+user needs — :class:`Autotuning`, :func:`tune_call`, :func:`make_strategy`,
+:class:`MeasurePolicy`, and the fleet entry points — are importable from
+``repro.tuning`` directly, whichever layer defines them.  Cross-layer names
+resolve lazily (PEP 562): ``repro.kernels`` itself imports ``repro.tuning``,
+so eager re-exports would cycle.
 """
 from .db import ENV_DB_PATH, TuningDB, default_db
+from .fleet import (
+    FleetResult,
+    MergeStats,
+    ShardedPortfolio,
+    better_record,
+    device_bound_measure,
+    merge_dbs,
+    merge_records,
+    parse_shard,
+    record_rank,
+)
 from .records import (
     SCHEMA_VERSION,
     TuningKey,
@@ -35,4 +57,48 @@ __all__ = [
     "space_fingerprint",
     "apply_warm_start",
     "record_from",
+    # fleet layer
+    "FleetResult",
+    "MergeStats",
+    "ShardedPortfolio",
+    "better_record",
+    "device_bound_measure",
+    "merge_dbs",
+    "merge_records",
+    "parse_shard",
+    "record_rank",
+    # facade re-exports (lazy: see __getattr__)
+    "Autotuning",
+    "tune_call",
+    "autotuned",
+    "make_strategy",
+    "MeasurePolicy",
+    "local_device_pool",
 ]
+
+#: facade name -> defining module (resolved on first attribute access —
+#: ``repro.kernels.autotuned`` imports this package at its own top level,
+#: so these must not be imported eagerly here)
+_FACADE = {
+    "Autotuning": "repro.core",
+    "make_strategy": "repro.core",
+    "MeasurePolicy": "repro.core",
+    "tune_call": "repro.kernels.autotuned",
+    "autotuned": "repro.kernels.autotuned",
+    "local_device_pool": "repro.parallel.devices",
+}
+
+
+def __getattr__(name: str):
+    mod = _FACADE.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value  # cache: next access skips the indirection
+    return value
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

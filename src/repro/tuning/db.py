@@ -155,11 +155,25 @@ class TuningDB:
             self.save()
 
     def merge(self, other: "TuningDB", *, prefer_lower_cost: bool = True) -> int:
-        """Fold another DB in; returns the number of records adopted."""
+        """Fold another DB in; returns the number of records adopted.
+
+        Conflicts resolve through the fleet merge resolver
+        (:func:`repro.tuning.fleet.better_record`): the keep-better rule of
+        ``Autotuning.commit()`` linearized into a total order — lower cost
+        wins, and inside the noise band the better-measured (lower-variance)
+        record stands, so folding shard DBs is associative and
+        order-independent.  ``prefer_lower_cost=False`` adopts every
+        incoming record unconditionally (a forced overwrite, not a merge)."""
+        from .fleet import better_record
+
         n = 0
         for rec in other.records():
             mine = self.get(rec.key)
-            if mine is None or not prefer_lower_cost or rec.cost < mine.cost:
+            if (
+                mine is None
+                or not prefer_lower_cost
+                or better_record(mine, rec) is rec
+            ):
                 self.put(rec, save=False)
                 n += 1
         if self.autosave and self.path is not None:

@@ -6,6 +6,20 @@
     PYTHONPATH=src python -m repro.tuning.pretune --db tuned/cpu.json --list
     PYTHONPATH=src python -m repro.tuning.pretune --db tuned/serve.json \
         --only 'matmul/128*'
+    PYTHONPATH=src python -m repro.tune pretune --db tuned/shard0.json \
+        --smoke --shard 0/4          # fleet worker 0 of 4
+
+(``python -m repro.tune pretune`` is the same command behind the umbrella
+CLI, which also provides ``db merge`` / ``db list`` / ``db diff``.)
+
+**Fleet sharding**: ``--shard i/n`` keeps only the contexts whose stable
+fingerprint hash lands in shard ``i`` — n workers running the same command
+with shards 0..n-1 partition the grid exactly, with zero coordination and
+no shared filesystem; each writes its own ``--db`` and
+``python -m repro.tune db merge`` folds them.  ``--cost analytic`` swaps
+wall-clock measurement for the candidate's deterministic roofline bound and
+``--no-warm-start`` removes sweep-order dependence, together making a
+sharded sweep bit-reproduce the unsharded one (the CI equivalence lane).
 
 Sweeps the registered (kernel, shape) grid, runs the PATSMA search per
 context, and commits every record atomically.  Each context's candidate
@@ -117,6 +131,60 @@ def _cases(smoke: bool, abstract: bool = False):
     return cases
 
 
+def _case_key(name: str, abstract_args, interpret: bool):
+    """The context fingerprint :func:`tune_call` would compute for this case
+    — built from ``ShapeDtypeStruct`` stand-ins (signatures and search
+    spaces read only shape/dtype), so shard assignment never materializes
+    the grid."""
+    from repro.kernels.autotuned import get_spec
+    from repro.tuning import make_key
+
+    spec = get_spec(name)
+    space = spec.space(*abstract_args)
+    return make_key(name, args=abstract_args, space=space,
+                    extra={"interpret": bool(interpret)})
+
+
+def _shard_filter(cases, smoke, wanted, only, shard, interpret: bool):
+    """Keep the cases whose fingerprint lands in ``shard`` = (index, num).
+    Assignment hashes the full context key (:meth:`TuningKey.shard`), so
+    every fleet worker computes the same partition with no coordination."""
+    from repro.tuning.fleet import in_shard
+
+    index, num = shard
+    abstract = {
+        (n, label): build
+        for n, label, build in _selected(_cases(smoke, abstract=True), wanted, only)
+    }
+    kept = []
+    for name, label, build in cases:
+        key = _case_key(name, abstract[(name, label)](), interpret=interpret)
+        if in_shard(key, index, num):
+            kept.append((name, label, build))
+    return kept
+
+
+def _analytic_cost_fn():
+    """Deterministic stand-in for wall-clock measurement: the candidate's
+    roofline lower bound (:func:`repro.core.costs.roofline_terms` over its
+    compiled HLO).  Identical inputs give identical costs on every host and
+    every run, which is what the fleet's shard-equivalence contract needs —
+    a sharded sweep and an unsharded sweep must land on the same best
+    points.  Candidates whose HLO defeats cost analysis fall back to a
+    constant (still deterministic); relative quality between such ties is
+    then decided by the search trajectory, which is equally deterministic."""
+    from repro.core import roofline_terms
+
+    def cost(ex, *args):
+        try:
+            b = float(roofline_terms(ex, chips=1).bound_s)
+        except Exception:
+            b = 0.0
+        return b if b > 0.0 else 1.0
+
+    return cost
+
+
 def _selected(cases, wanted, only):
     """Filter the grid by --kernel names and --only globs (case ids match as
     ``kernel`` or ``kernel/label``)."""
@@ -162,9 +230,9 @@ def _list_grid(cases, db, interpret: bool) -> int:
     return 0
 
 
-def main(argv=None) -> int:
+def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
     ap = argparse.ArgumentParser(
-        prog="repro.tuning.pretune", description="offline tuning sweep -> JSON DB"
+        prog=prog, description="offline tuning sweep -> JSON DB"
     )
     ap.add_argument("--db", type=str, default="tuned/cpu.json", help="DB file to fill")
     ap.add_argument("--smoke", action="store_true", help="tiny grid + budget (CI lane)")
@@ -198,6 +266,27 @@ def main(argv=None) -> int:
              "CSA→NM hybrid pipeline), 'csa:0.7+nm:0.3', or 'csa|nm' "
              "(portfolio); default: plain CSA — same total tell budget either way",
     )
+    ap.add_argument(
+        "--shard", type=str, default=None, metavar="I/N",
+        help="tune only this worker's deterministic slice of the grid "
+             "(stable context-fingerprint hash mod N — N workers with "
+             "--shard 0/N .. (N-1)/N cover the grid exactly once with zero "
+             "coordination; merge the per-shard DBs with "
+             "'python -m repro.tune db merge')",
+    )
+    ap.add_argument(
+        "--cost", choices=("runtime", "analytic"), default="runtime",
+        help="candidate cost: measured wall-clock (default) or the "
+             "deterministic roofline lower bound of the compiled candidate — "
+             "host-independent and noise-free, so sharded and unsharded "
+             "sweeps land on identical best points (the CI equivalence lane)",
+    )
+    ap.add_argument(
+        "--no-warm-start", action="store_true",
+        help="disable DB neighbor seeding: each context's search is "
+             "independent of sweep order and of what the DB already holds "
+             "(required for exact shard-equivalence)",
+    )
     args = ap.parse_args(argv)
 
     from repro.kernels.autotuned import exec_cache, registered, tune_call
@@ -220,9 +309,22 @@ def main(argv=None) -> int:
     if not cases:
         print("pretune: no cases match the given filters", file=sys.stderr)
         return 2
+    if args.shard is not None:
+        from repro.tuning.fleet import parse_shard
+
+        index, num = parse_shard(args.shard)
+        total = len(cases)
+        cases = _shard_filter(cases, args.smoke, wanted, args.only,
+                              (index, num), interpret=not args.no_interpret)
+        print(f"pretune: shard {index}/{num}: {len(cases)}/{total} cases")
+        if not cases:
+            # an empty shard is a fleet worker with nothing to do, not an error
+            db.save()
+            return 0
     if args.list_grid:
         return _list_grid(cases, db, interpret=not args.no_interpret)
 
+    cost_fn = _analytic_cost_fn() if args.cost == "analytic" else None
     n_done = 0
     t_all = time.perf_counter()
     # aggregate measurement-engine counters across the sweep (run summary)
@@ -245,6 +347,8 @@ def main(argv=None) -> int:
             measure=args.measure,
             measure_stats=mstats,
             strategy=args.strategy,
+            cost_fn=cost_fn,
+            warm_start=not args.no_warm_start,
         )
         dt = time.perf_counter() - t0
         for k in totals:
@@ -285,4 +389,11 @@ def main(argv=None) -> int:
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    # thin shim: ``python -m repro.tuning.pretune`` is the historical entry
+    # point; it now routes through the umbrella CLI (``python -m repro.tune
+    # pretune``) so both spellings share one dispatch path
+    import sys as _sys
+
+    from repro.tune import main as _tune_main
+
+    raise SystemExit(_tune_main(["pretune", *_sys.argv[1:]]))

@@ -113,6 +113,19 @@ class TuningKey:
     def from_json(cls, d: Mapping[str, Any]) -> "TuningKey":
         return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
 
+    def shard(self, num_shards: int) -> int:
+        """Deterministic shard assignment for fleet pretuning.
+
+        A stable hash (sha256 of the canonical encoding — never Python
+        ``hash()``, which is salted per process) of the full fingerprint,
+        reduced mod ``num_shards``: every worker of a fleet computes the
+        same shard for the same context with **zero coordination**, so
+        ``pretune --shard i/n`` partitions the grid without a scheduler."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        h = hashlib.sha256(self.encode().encode()).digest()
+        return int.from_bytes(h[:8], "big") % num_shards
+
     # --------------------------------------------------- neighbor matching
     def shapes(self) -> Optional[list]:
         """Array shapes in the signature, or None if it has none.  Memoized:
@@ -214,6 +227,16 @@ class TuningRecord:
     cost_std: Optional[float] = None  # std over the best point's measured reps
     repeats_spent: Optional[int] = None  # reps behind the stored cost
     strategy: Optional[str] = None  # search strategy spec behind the record
+
+    def known_std(self) -> Optional[float]:
+        """The record's measured standard deviation, or ``None`` when it
+        carries no *meaningful* confidence — absent fields (pre-engine
+        records) and single-rep measurements (whose std of 0.0 is unknown,
+        not perfect).  The shared definition behind ``commit()``'s near-tie
+        guard and the fleet merge resolver."""
+        if self.cost_std is None or (self.repeats_spent or 0) <= 1:
+            return None
+        return float(self.cost_std)
 
     def to_json(self) -> dict:
         return {

@@ -1,0 +1,400 @@
+"""Distributed tuning fleet: shard partitioning, order-independent DB
+merging, the umbrella CLI, the ShardedPortfolio race, and the unified
+``search=`` surface."""
+import itertools
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import CSA, Autotuning, NelderMead, Portfolio, RandomSearch
+from repro.tuning import TuningDB, TuningKey, TuningRecord, make_key
+from repro.tuning.fleet import (
+    ShardedPortfolio,
+    better_record,
+    merge_dbs,
+    merge_records,
+    parse_shard,
+    record_rank,
+)
+
+
+def _key(name="unit", tag="a"):
+    return TuningKey(name=name, signature=f"sig-{tag}", space_hash="h",
+                     backend="cpu", device_kind="cpu")
+
+
+def _rec(key=None, *, cost=1.0, std=None, reps=None, created=1.0, point=None):
+    return TuningRecord(
+        key=key if key is not None else _key(),
+        point=point if point is not None else {"p": 1},
+        cost=cost, cost_std=std, repeats_spent=reps, created=created,
+    )
+
+
+# ------------------------------------------------------------------ sharding
+def test_parse_shard():
+    assert parse_shard("0/1") == (0, 1)
+    assert parse_shard(" 2/8 ") == (2, 8)
+    for bad in ("8/8", "-1/4", "4/0", "x/y", "3", "1/2/3"):
+        with pytest.raises(ValueError):
+            parse_shard(bad)
+
+
+def test_shard_partition_complete_disjoint_and_stable():
+    keys = [_key(name=f"k{i}", tag=str(i)) for i in range(40)]
+    for n in (1, 2, 3, 8):
+        shards = [k.shard(n) for k in keys]
+        assert all(0 <= s < n for s in shards)
+        # stable: recomputing gives the identical assignment
+        assert shards == [k.shard(n) for k in keys]
+    # n=1 is the degenerate single worker owning everything
+    assert all(k.shard(1) == 0 for k in keys)
+    # a 40-key grid into 2 shards should not collapse onto one worker
+    two = [k.shard(2) for k in keys]
+    assert 0 < sum(two) < len(two)
+
+
+def test_shard_partition_of_pretune_grid_is_complete_and_disjoint():
+    """`pretune --shard i/n` across all i covers the smoke grid exactly once
+    — the zero-coordination contract a fleet of workers relies on."""
+    pytest.importorskip("jax")
+    from repro.tuning.pretune import _cases, _shard_filter
+
+    cases = _cases(True, abstract=True)
+    all_ids = [(name, label) for name, label, _ in cases]
+    for n in (2, 3):
+        shards = [
+            [(name, label) for name, label, _ in
+             _shard_filter(cases, True, None, None, (i, n), interpret=True)]
+            for i in range(n)
+        ]
+        combined = [cid for s in shards for cid in s]
+        assert sorted(combined) == sorted(all_ids)  # complete + disjoint
+        # and stable: recomputing the same shard gives the same cases
+        again = [(name, label) for name, label, _ in
+                 _shard_filter(cases, True, None, None, (0, n), interpret=True)]
+        assert again == shards[0]
+
+
+# ------------------------------------------------------------- merge resolver
+def test_merge_lower_cost_wins():
+    a, b = _rec(cost=1.0), _rec(cost=2.0)
+    assert better_record(a, b) is a
+    assert better_record(b, a) is a
+
+
+def test_merge_near_tie_prefers_lower_variance():
+    """Inside the noise band the better-measured record stands — the same
+    rule as Autotuning.commit()'s keep-better guard."""
+    lucky = _rec(cost=0.99, std=0.5, reps=8, created=2.0)
+    steady = _rec(cost=1.00, std=0.01, reps=8, created=1.0)
+    assert better_record(lucky, steady) is steady
+    # a *separated* win beats any variance argument
+    clear = _rec(cost=0.2, std=0.5, reps=8)
+    assert better_record(clear, steady) is clear
+
+
+def test_merge_single_rep_std_is_unknown_not_zero():
+    """A single-repetition record's std of 0.0 must not read as perfect
+    confidence: the 2% relative prior penalizes it past a well-measured
+    near-tie."""
+    one_rep = _rec(cost=1.0, std=0.0, reps=1)
+    measured = _rec(cost=1.005, std=0.001, reps=8)
+    assert better_record(one_rep, measured) is measured
+
+
+def test_merge_infinite_cost_always_loses():
+    dead = _rec(cost=float("inf"))
+    alive = _rec(cost=1e9)
+    assert better_record(dead, alive) is alive
+    assert merge_records([dead, dead]) is dead  # still total on all-inf
+
+
+def test_merge_total_order_is_permutation_invariant():
+    """The resolver must pick one winner regardless of fold order — the
+    pairwise commit guard alone is not transitive, the rank linearizes it."""
+    recs = [
+        _rec(cost=1.2, std=0.1, reps=8, created=1.0, point={"p": 1}),
+        _rec(cost=1.0, std=0.5, reps=8, created=2.0, point={"p": 2}),
+        _rec(cost=0.9, std=None, reps=None, created=3.0, point={"p": 3}),
+        _rec(cost=float("inf"), created=4.0, point={"p": 4}),
+    ]
+    ranks = set()
+    for perm in itertools.permutations(recs):
+        w = perm[0]
+        for r in perm[1:]:
+            w = better_record(w, r)
+        ranks.add(record_rank(w))
+    assert len(ranks) == 1
+    assert record_rank(merge_records(recs)) == ranks.pop()
+
+
+def test_merge_dbs_associative_across_shards(tmp_path):
+    """Divergent shard DBs fold to the same destination whatever the merge
+    order or grouping — and to what commit()'s guard would keep per key."""
+    k1, k2, k3 = (_key(tag=t) for t in "123")
+    s0 = TuningDB(str(tmp_path / "s0.json"))
+    s1 = TuningDB(str(tmp_path / "s1.json"))
+    s2 = TuningDB(str(tmp_path / "s2.json"))
+    s0.put(_rec(k1, cost=1.0, std=0.01, reps=8, created=1.0))
+    s1.put(_rec(k1, cost=0.99, std=0.5, reps=8, created=2.0))  # lucky near-tie
+    s2.put(_rec(k1, cost=2.0, created=3.0))
+    s1.put(_rec(k2, cost=5.0, created=1.0))
+    s2.put(_rec(k2, cost=4.0, created=2.0))
+    s0.put(_rec(k3, cost=7.0, created=1.0))
+
+    def fold(order, pairwise):
+        dest = TuningDB()  # in-memory
+        dbs = [s0, s1, s2]
+        if pairwise:
+            for i in order:
+                merge_dbs(dest, [dbs[i]])
+        else:
+            merge_dbs(dest, [dbs[i] for i in order])
+        return {k: record_rank(r) for k, r in
+                ((rec.key.encode(), rec) for rec in dest.records())}
+
+    outcomes = {
+        json.dumps(sorted(fold(order, pw).items()))
+        for order in itertools.permutations(range(3))
+        for pw in (True, False)
+    }
+    assert len(outcomes) == 1
+    # and the per-key winners are the keep-better picks
+    dest = TuningDB()
+    stats = merge_dbs(dest, [s0, s1, s2])
+    assert stats.seen == 6
+    assert (stats.new, stats.replaced, stats.kept) == (3, 1, 2)
+    assert stats.adopted == 4
+    assert len(dest) == 3
+    assert dest.get(k1).cost == 1.0  # steady record beats the lucky near-tie
+    assert dest.get(k2).cost == 4.0
+    assert dest.get(k3).cost == 7.0
+
+
+def test_tuningdb_merge_uses_fleet_resolver():
+    db_a, db_b = TuningDB(), TuningDB()
+    k = _key()
+    db_a.put(_rec(k, cost=1.0, std=0.01, reps=8, created=1.0))
+    db_b.put(_rec(k, cost=0.99, std=0.5, reps=8, created=2.0))
+    adopted = db_a.merge(db_b)
+    assert adopted == 0  # lucky near-tie loses to the steadier record
+    assert db_a.get(k).cost == 1.0
+
+
+# ------------------------------------------------------------------- CLI
+def test_tune_cli_db_merge_list_diff(tmp_path):
+    from repro.tune import main as tune_main
+
+    k1, k2 = _key(tag="1"), _key(tag="2")
+    a = TuningDB(str(tmp_path / "a.json"))
+    b = TuningDB(str(tmp_path / "b.json"))
+    a.put(_rec(k1, cost=1.0, created=1.0))
+    b.put(_rec(k1, cost=0.5, created=2.0))
+    b.put(_rec(k2, cost=3.0, created=1.0))
+
+    out = str(tmp_path / "merged.json")
+    assert tune_main(["db", "merge", "--out", out,
+                      str(tmp_path / "a.json"), str(tmp_path / "b.json")]) == 0
+    merged = TuningDB(out)
+    assert len(merged) == 2 and merged.get(k1).cost == 0.5
+
+    assert tune_main(["db", "list", "--db", out]) == 0
+    # diff: merged vs b differ on k1's point? identical points here, but a
+    # missing key in a vs merged must exit 1
+    assert tune_main(["db", "diff", out, str(tmp_path / "b.json")]) == 0
+    assert tune_main(["db", "diff", out, str(tmp_path / "a.json")]) == 1
+    # missing file is a usage error (2), not a crash
+    assert tune_main(["db", "merge", "--out", out, str(tmp_path / "nope.json")]) == 2
+    assert tune_main(["nonsense"]) == 2
+
+
+def test_tune_cli_db_diff_detects_point_mismatch(tmp_path):
+    from repro.tune import main as tune_main
+
+    k = _key()
+    a = TuningDB(str(tmp_path / "a.json"))
+    b = TuningDB(str(tmp_path / "b.json"))
+    a.put(_rec(k, point={"p": 1}))
+    b.put(_rec(k, point={"p": 2}))
+    assert tune_main(["db", "diff", str(tmp_path / "a.json"),
+                      str(tmp_path / "b.json")]) == 1
+
+
+# ------------------------------------------------------- sharded portfolio
+def _cost(x):
+    x = np.asarray(x, dtype=float)
+    return float(np.sum((x - 0.3) ** 2) + 0.05 * np.cos(8.0 * x[0]))
+
+
+def _drive_serial(portfolio):
+    while not portfolio.is_end():
+        batch = portfolio.ask()
+        if not batch:
+            break
+        portfolio.tell([_cost(p) for p in batch])
+    return portfolio
+
+
+@pytest.mark.parametrize("budget", [80, None])
+def test_sharded_portfolio_matches_serial_race(budget):
+    """Deterministic costs → the concurrent rung-barrier driver makes the
+    same cull decisions and finds the same member bests as the serial
+    Portfolio."""
+
+    def members():
+        return [
+            CSA(2, num_opt=4, max_iter=10, seed=0),
+            CSA(2, num_opt=4, max_iter=10, seed=1),
+            RandomSearch(2, max_iter=40, seed=3),
+            NelderMead(2, error=0.0, max_iter=40, seed=2),
+        ]
+
+    serial = _drive_serial(Portfolio(members(), budget=budget, rung=4))
+    fleet = ShardedPortfolio(members(), budget=budget, rung=4)
+    res = fleet.run(lambda i, pts: [_cost(p) for p in pts])
+    assert res.survivors == serial.active
+    for a, b in zip(res.member_bests, serial.member_bests):
+        assert (np.isinf(a) and np.isinf(b)) or abs(a - b) < 1e-12
+    assert res.spent == serial.spent
+    assert np.isfinite(res.best_cost)
+    assert abs(res.best_cost - min(res.member_bests)) < 1e-12
+
+
+def test_sharded_portfolio_culls_laggards():
+    """A member pinned to a hopeless region is culled, and the race ends
+    with the survivors' budget honestly accounted."""
+
+    def members():
+        return [CSA(2, num_opt=4, max_iter=8, seed=s) for s in range(4)]
+
+    fleet = ShardedPortfolio(members(), budget=96, rung=4)
+
+    def measure(i, pts):
+        # member 3 is sandbagged far above everyone else's floor
+        return [(_cost(p) + (100.0 if i == 3 else 0.0)) for p in pts]
+
+    res = fleet.run(measure)
+    assert 3 not in res.survivors
+    assert res.member_spent[3] < max(res.member_spent)
+    assert sum(res.member_spent) == res.spent
+
+
+def test_sharded_portfolio_validates():
+    with pytest.raises(ValueError):
+        ShardedPortfolio([CSA(2, num_opt=2, max_iter=2)])
+    with pytest.raises(ValueError):
+        ShardedPortfolio(
+            [CSA(2, num_opt=2, max_iter=2), CSA(3, num_opt=2, max_iter=2)]
+        )
+    with pytest.raises(ValueError):
+        ShardedPortfolio(
+            [CSA(2, num_opt=2, max_iter=2), CSA(2, num_opt=2, max_iter=2)],
+            budget=0,
+        )
+
+
+def test_cache_partitions_do_not_collide():
+    from repro.core import ExecutableCache
+
+    base = ExecutableCache(maxsize=8)
+    p0, p1 = base.partition("dev0"), base.partition("dev1")
+    assert p0.get_or_build("k", lambda: "exe-dev0") == "exe-dev0"
+    # the same key in another partition is a distinct executable
+    assert p1.peek("k") is None
+    assert p1.get_or_build("k", lambda: "exe-dev1") == "exe-dev1"
+    assert p0.peek("k") == "exe-dev0"
+    assert len(base) == 2
+    # nested partitions compose tags instead of flattening into collisions
+    assert p0.partition("x")._key("k") != p1.partition("x")._key("k")
+
+
+def test_device_pool_and_bound_measure():
+    pytest.importorskip("jax")
+    from repro.core import ExecutableCache
+    from repro.parallel.devices import local_device_pool
+    from repro.tuning.fleet import device_bound_measure
+
+    cache = ExecutableCache(maxsize=8)
+    slots = local_device_pool(4, cache=cache)
+    assert len(slots) == 4
+    assert all(s.cache is not None for s in slots)
+    slots[0].cache.get_or_build("k", lambda: "a")
+    assert slots[0].cache.peek("k") == "a"
+    seen = []
+    wrapped = device_bound_measure(lambda i, pts: seen.append(i) or [0.0] * len(pts),
+                                   slots)
+    assert wrapped(0, [np.zeros(2)]) == [0.0]
+    assert seen == [0]
+    with pytest.raises(ValueError):
+        local_device_pool(0)
+
+
+# ----------------------------------------------------- unified search= API
+def _measure_batch(points):
+    """entire_exec_batch hands decoded point dicts to the measurement hook."""
+    return [float(sum(float(v) ** 2 for v in p.values())) for p in points]
+
+
+def test_autotuning_search_consolidation():
+    from repro.core import IntDim, SearchSpace
+
+    space = SearchSpace([IntDim("p", 1, 32)])
+    # spec string, optimizer instance, and strategy object all ride search=
+    for search in ("csa", CSA(1, num_opt=3, max_iter=4, seed=0)):
+        at = Autotuning(space=space, search=search, num_opt=3, max_iter=4, seed=0)
+        at.entire_exec_batch(_measure_batch)
+        assert at.finished
+
+    # passing more than one search method is an error, not a silent pick
+    with pytest.raises(ValueError):
+        Autotuning(dim=1, search="csa", optimizer=CSA(1, num_opt=2, max_iter=2))
+    with pytest.raises(ValueError):
+        Autotuning(dim=1, optimizer=CSA(1, num_opt=2, max_iter=2), strategy="csa")
+
+
+def test_deprecated_aliases_warn_and_match_search():
+    """optimizer=/strategy= still work (one DeprecationWarning) and give the
+    identical trajectory to the same value passed as search=."""
+    def run(**kw):
+        at = Autotuning(dim=2, num_opt=3, max_iter=5, seed=7, **kw)
+        history = []
+
+        def measure(points):
+            costs = _measure_batch(points)
+            history.extend(costs)
+            return costs
+
+        at.entire_exec_batch(measure)
+        return history, at.best_point
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        h_old, best_old = run(optimizer=CSA(2, num_opt=3, max_iter=5, seed=7))
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+    h_new, best_new = run(search=CSA(2, num_opt=3, max_iter=5, seed=7))
+    assert h_old == h_new and best_old == best_new
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        h_strat, _ = run(strategy="csa")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    h_spec, _ = run(search="csa")
+    assert h_strat == h_spec
+
+
+def test_tuning_facade_exports():
+    import repro.tuning as T
+
+    # cross-layer facade names resolve lazily (no import cycle with kernels)
+    assert T.Autotuning.__name__ == "Autotuning"
+    assert callable(T.tune_call)
+    assert callable(T.make_strategy)
+    assert T.MeasurePolicy.__name__ == "MeasurePolicy"
+    assert callable(T.local_device_pool)
+    assert callable(T.merge_dbs) and callable(T.parse_shard)
+    # __dir__ advertises the facade
+    assert "tune_call" in dir(T)
