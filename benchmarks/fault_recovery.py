@@ -1,0 +1,145 @@
+"""Fault-recovery benchmark: what the resilience layer costs, and what it
+survives.
+
+Three runs of the *same* deterministic search (matmul block-size grid,
+interpret mode, analytic cost model — no timer noise in the search itself):
+
+  * **faulted** — guarded (`FaultPolicy`) under a deterministic
+    :class:`~repro.testing.faults.FaultPlan` throwing the acceptance
+    scenario at it: one candidate hangs (watchdog changes it to ``inf``),
+    one fails transiently twice then succeeds (retried in place), one
+    hard-crashes its build (charged ``inf``).  The run must complete and
+    converge to the same best point as the fault-free run.
+  * **clean** — the classic unguarded run: the reference best point and
+    the wall-clock baseline.
+  * **guarded** — same `FaultPolicy` armed, zero faults: the pure overhead
+    of the guard machinery (watchdog threads, quarantine bookkeeping) on a
+    healthy run.  Reported as ``overhead_ratio`` = guarded / clean wall
+    (compile cache warm for both, so this is search+measure overhead, not
+    compile variance).
+
+Prints ``fault_recovery_*,us,...`` CSV lines for the CI artifact.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+#: 320 = 64*5: a shape no test suite tunes, so the faulted run's compiles
+#: are genuinely cold and the injected build crash reaches a real build
+N = 320
+TIMING_ROUNDS = 5  # median-of-N for the (tiny) warm-cache wall clocks
+
+
+def _args():
+    import jax.numpy as jnp
+
+    return (jnp.ones((N, N), jnp.float32), jnp.ones((N, N), jnp.float32))
+
+
+def _tune(a, b, *, fault_policy=None, fault_plan=None, measure_stats=None):
+    from repro.kernels.autotuned import tune_call
+    from repro.tuning import TuningDB
+    from repro.tuning.pretune import _analytic_cost_fn
+
+    return tune_call(
+        "matmul", a, b,
+        db=TuningDB(path=None), interpret=True, strategy="grid",
+        cost_fn=_analytic_cost_fn(), warm_start=False, jobs=1,
+        fault_policy=fault_policy, fault_plan=fault_plan,
+        measure_stats=measure_stats,
+    )
+
+
+def _fault_plan():
+    from repro.testing import FaultPlan, FaultSpec
+
+    return FaultPlan([
+        FaultSpec(kind="hang", site="cost",
+                  match={"bm": 32, "bn": 32, "bk": 64}, seconds=0.3),
+        FaultSpec(kind="transient", site="cost",
+                  match={"bm": 64, "bn": 32, "bk": 32}, times=2),
+        FaultSpec(kind="crash", site="build",
+                  match={"bm": 32, "bn": 64, "bk": 32}, times=1),
+    ])
+
+
+def _timed(fn) -> float:
+    best = float("inf")
+    for _ in range(TIMING_ROUNDS):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(csv: bool = True) -> dict:
+    from repro.core import FaultPolicy
+    from repro.testing import FaultPlan
+
+    a, b = _args()
+    policy = FaultPolicy(measure_timeout=0.05, retries=2, backoff=0.001)
+
+    # faulted first: its compiles are cache-cold, so the injected build
+    # crash hits an actual build (later runs reuse the surviving artifacts)
+    plan = _fault_plan()
+    stats: dict = {}
+    t0 = time.perf_counter()
+    rec_faulted = _tune(a, b, fault_policy=policy, fault_plan=plan,
+                        measure_stats=stats)
+    faulted_s = time.perf_counter() - t0
+    completed = rec_faulted is not None
+
+    rec_clean = _tune(a, b, fault_plan=FaultPlan([]))
+    best_match = (
+        completed and rec_clean is not None
+        and rec_faulted.point == rec_clean.point
+    )
+
+    # warm-cache wall clocks: guard machinery overhead on a healthy run
+    clean_s = _timed(lambda: _tune(a, b, fault_plan=FaultPlan([])))
+    guarded_s = _timed(
+        lambda: _tune(a, b, fault_policy=policy, fault_plan=FaultPlan([]))
+    )
+    overhead_ratio = guarded_s / clean_s if clean_s > 0 else float("inf")
+
+    out = {
+        "completed": completed,
+        "best_match": bool(best_match),
+        "faults_fired": int(plan.count()),
+        "timeouts": int(stats.get("timeouts", 0)),
+        "retried": int(stats.get("retried", 0)),
+        "faulted_s": faulted_s,
+        "clean_s": clean_s,
+        "guarded_s": guarded_s,
+        "overhead_ratio": overhead_ratio,
+        "best_point": str(rec_clean.point if rec_clean is not None else None),
+    }
+    if csv:
+        print(f"fault_recovery_clean,{clean_s * 1e6:.1f},baseline")
+        print(f"fault_recovery_guarded,{guarded_s * 1e6:.1f},"
+              f"overhead_ratio={overhead_ratio:.3f}")
+        print(f"fault_recovery_faulted,{faulted_s * 1e6:.1f},"
+              f"completed={completed},best_match={best_match},"
+              f"faults_fired={plan.count()}")
+    return out
+
+
+def smoke() -> dict:
+    return run()
+
+
+def main(argv=None) -> dict:
+    return run()
+
+
+if __name__ == "__main__":
+    out = main(sys.argv[1:])
+    ok = out["completed"] and out["best_match"]
+    print(f"fault_recovery: {'OK' if ok else 'FAILED'} {out}")
+    sys.exit(0 if ok else 1)

@@ -19,6 +19,17 @@ from .costs import (
 )
 from .csa import CSA
 from .grid_random import GridSearch, RandomSearch
+from .guard import (
+    CircuitBreaker,
+    FaultPolicy,
+    GuardTimeout,
+    Quarantine,
+    SandboxCrash,
+    deterministic_backoff,
+    guarded_call,
+    is_transient_failure,
+    sandboxed_probe,
+)
 from .measure import (
     MeasureEngine,
     MeasurePolicy,
@@ -70,6 +81,15 @@ __all__ = [
     "CachePartition",
     "aot_compile",
     "compile_fanout",
+    "FaultPolicy",
+    "GuardTimeout",
+    "SandboxCrash",
+    "CircuitBreaker",
+    "Quarantine",
+    "guarded_call",
+    "sandboxed_probe",
+    "is_transient_failure",
+    "deterministic_backoff",
     "HardwareSpec",
     "RooflineTerms",
     "TPU_V5E",

@@ -160,6 +160,7 @@ class Autotuning:
         self._evals = 0  # completed cost evaluations fed to the optimizer
         self._measurements = 0  # target iterations spent on tuning (incl. ignored)
         self._history: list = []  # (point_dict, cost)
+        self.skip_reasons: dict = {}  # reason -> count of tagged skip() calls
         self._measure_meta: dict = {}  # space.key -> measurement bookkeeping
         self._measured_costs: dict = {}  # space.key -> last *real* measured cost
         # persistent tuning store (repro.tuning): exact hit / warm seed
@@ -373,7 +374,7 @@ class Autotuning:
             self._feed(float(cost))
         return self.point
 
-    def skip(self, cost: float = np.inf) -> dict:
+    def skip(self, cost: float = np.inf, *, reason: Optional[str] = None) -> dict:
         """Reject the current candidate outright and advance to the next one.
 
         Unlike :meth:`exec`, the cost is delivered immediately — ``ignore``
@@ -383,8 +384,16 @@ class Autotuning:
         request on it.  The charge is *not* written to the cost cache — a
         failure may be transient (compile resource pressure), so a revisited
         candidate must be offered for a fresh build attempt rather than have
-        the cached ``inf`` replayed for the rest of the search."""
+        the cached ``inf`` replayed for the rest of the search.
+
+        ``reason`` tags the rejection for run summaries (``skip_reasons``):
+        the resilience layer distinguishes ``"build-failed"``, ``"timeout"``,
+        and ``"quarantined"`` skips when reporting why a search starved."""
         if not self.finished:
+            if reason is not None:
+                self.skip_reasons[reason] = self.skip_reasons.get(reason, 0) + 1
+                if self.verbose:
+                    print(f"[patsma] skip {self._point} ({reason})")
             self._deliver(float(cost), cacheable=False)
         return self.point
 

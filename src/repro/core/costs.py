@@ -26,7 +26,8 @@ import re
 import threading
 import time
 from collections import OrderedDict
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
 from typing import Any, Callable, Hashable, List, Optional, Sequence, Tuple
 
 __all__ = [
@@ -152,11 +153,16 @@ class ExecutableCache:
         maxsize: int = 1024,
         *,
         cache_failures: Optional[Callable[[BaseException], bool]] = None,
+        guard: Optional[Callable[[Callable[[], Any]], Callable[[], Any]]] = None,
     ) -> None:
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
         self.maxsize = int(maxsize)
         self._cache_failures = cache_failures
+        # optional resilience hook: wraps every owner build (e.g.
+        # ``FaultPolicy.wrap`` adds a watchdog timeout + transient retries)
+        # without callers having to wrap each build thunk themselves
+        self._guard = guard
         self._lock = threading.Lock()
         self._entries: "OrderedDict[Hashable, Future]" = OrderedDict()
         self._built: set = set()  # keys ever built (recompile accounting)
@@ -192,7 +198,8 @@ class ExecutableCache:
                     self.evictions += 1
         if owner:
             try:
-                result: Any = build()
+                run = self._guard(build) if self._guard is not None else build
+                result: Any = run()
             except Exception as e:  # cached: deterministic for a fixed context
                 result = e
                 if self._cache_failures is not None and not self._cache_failures(e):
@@ -288,20 +295,80 @@ def compile_fanout(
     *,
     cache: Optional[ExecutableCache] = None,
     jobs: int = 1,
+    deadline: Optional[float] = None,
+    fatal: Optional[Callable[[BaseException], bool]] = None,
 ) -> List[Any]:
     """Compile ``items`` = [(key, build), ...] concurrently, deduped through
     ``cache``.  Returns one executable-or-exception per item, in order.
 
     XLA compilation releases the GIL, so a thread pool genuinely overlaps the
     expensive part; Python tracing inside each ``build`` stays GIL-bound.
+
+    ``deadline`` bounds the *whole round* in seconds: builds not finished at
+    the deadline are cancelled where possible (never-started futures) or
+    abandoned (in-flight builds keep running in the background and still
+    populate the cache for a later round), and their items come back as
+    :class:`~repro.core.guard.GuardTimeout` failure objects.
+
+    ``fatal`` is a predicate on completed failure results: the first failure
+    it marks fatal cancels every outstanding future and is **raised** instead
+    of returned — a poisoned round (e.g. a TypeError that would hit every
+    candidate identically) fails fast instead of silently draining the
+    executor.  Non-fatal failures keep the classic returned-not-raised
+    contract.
     """
+    from .guard import GuardTimeout
+
     if cache is None:
         cache = ExecutableCache(maxsize=max(len(items), 1))
     if jobs <= 1 or len(items) <= 1:
-        return [cache.get_or_build(k, b) for k, b in items]
-    with ThreadPoolExecutor(max_workers=min(jobs, len(items))) as pool:
-        futs = [pool.submit(cache.get_or_build, k, b) for k, b in items]
-        return [f.result() for f in futs]
+        t0 = time.monotonic()
+        results: List[Any] = []
+        for k, b in items:
+            if deadline is not None and (time.monotonic() - t0) >= deadline:
+                results.append(GuardTimeout(
+                    f"compile round exceeded deadline of {deadline:.3g}s"
+                ))
+                continue
+            r = cache.get_or_build(k, b)
+            if fatal is not None and isinstance(r, BaseException) and fatal(r):
+                raise r
+            results.append(r)
+        return results
+    pool = ThreadPoolExecutor(max_workers=min(jobs, len(items)))
+    futs = [pool.submit(cache.get_or_build, k, b) for k, b in items]
+    results = [None] * len(items)
+    pending = {f: i for i, f in enumerate(futs)}
+    try:
+        t0 = time.monotonic()
+        while pending:
+            budget = None
+            if deadline is not None:
+                budget = deadline - (time.monotonic() - t0)
+                if budget <= 0:
+                    break
+            done, _ = futures_wait(
+                list(pending), timeout=budget, return_when=FIRST_COMPLETED
+            )
+            if not done:
+                break  # deadline expired with builds still in flight
+            for f in done:
+                i = pending.pop(f)
+                r = f.result()
+                results[i] = r
+                if fatal is not None and isinstance(r, BaseException) and fatal(r):
+                    for pf in pending:
+                        pf.cancel()
+                    raise r
+        for f, i in pending.items():
+            f.cancel()
+            results[i] = GuardTimeout(
+                f"compile round exceeded deadline of {deadline:.3g}s"
+            )
+    finally:
+        # never wait: a hung build must not block the round past its deadline
+        pool.shutdown(wait=False)
+    return results
 
 
 # --------------------------------------------------------------------- HLO

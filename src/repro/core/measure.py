@@ -210,10 +210,15 @@ class MeasureEngine:
         *,
         noise: Optional[NoiseEstimate] = None,
         on_error: Optional[Callable[[int, BaseException], None]] = None,
+        guard=None,
     ) -> None:
         self.policy = policy if policy is not None else MeasurePolicy()
         self.noise = noise
         self.on_error = on_error
+        # optional FaultPolicy: every repetition runs under its watchdog
+        # deadline (a hung candidate is charged inf, the run survives) with
+        # transient failures retried in place
+        self.guard = guard
         self.best_measured = math.inf  # incumbent for the roofline prefilter
         self.stats = {
             "mode": self.policy.mode,
@@ -226,6 +231,8 @@ class MeasureEngine:
             "reps": 0,
             "warmup_reps": 0,
             "calibration_reps": 0,
+            "timeouts": 0,
+            "retried": 0,
         }
 
     # ------------------------------------------------------------- internals
@@ -233,10 +240,33 @@ class MeasureEngine:
         """One repetition; returns the observed time or the exception.
         Control-flow exceptions always propagate — a Ctrl-C mid-measurement
         must never be classified into a candidate's failure cost."""
+        from .guard import GuardTimeout, guarded_call
+
+        g = self.guard
         try:
-            t = float(fn())
+            if g is not None and (g.measure_timeout is not None or g.retries > 0):
+                def _on_retry(attempt, exc, delay):
+                    self.stats["retried"] += 1
+
+                t = float(guarded_call(
+                    fn,
+                    timeout=g.measure_timeout,
+                    retries=g.retries,
+                    backoff=g.backoff,
+                    backoff_mult=g.backoff_mult,
+                    jitter=g.jitter,
+                    label=f"measure[{idx}]",
+                    on_retry=_on_retry,
+                ))
+            else:
+                t = float(fn())
         except (KeyboardInterrupt, SystemExit):
             raise
+        except GuardTimeout as e:
+            self.stats["timeouts"] += 1
+            if self.on_error is not None:
+                self.on_error(idx, e)
+            return e
         except Exception as e:
             if self.on_error is not None:
                 self.on_error(idx, e)

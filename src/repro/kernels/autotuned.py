@@ -32,16 +32,23 @@ import numpy as np
 from repro.core import (
     Autotuning,
     ExecutableCache,
+    FaultPolicy,
+    GuardTimeout,
     LogIntDim,
     MeasureEngine,
     MeasurePolicy,
     MeasureResult,
+    Quarantine,
     RuntimeCost,
     SearchSpace,
     compile_fanout,
+    guarded_call,
+    is_transient_failure,
     resolve_measure_policy,
+    sandboxed_probe,
     time_rep,
 )
+from repro.core.guard import TRANSIENT_MARKERS as _TRANSIENT_MARKERS
 from repro.core.measure import ENV_TUNE_MEASURE  # noqa: F401 - public re-export
 from repro.tuning import TuningDB, default_db, make_key
 
@@ -208,10 +215,9 @@ _ILLEGAL_MARKERS = (
 #: about an unknown kwarg, which must never pass for an illegal-tile failure
 _BUG_EXC_TYPES = (TypeError, AttributeError, NameError, ImportError, SyntaxError)
 
-#: failures that may be transient (e.g. RESOURCE_EXHAUSTED purely from the
-#: memory pressure of concurrent compiles) — classified "illegal" so the
-#: search moves on quietly, but never cached as permanent: a revisit retries
-_TRANSIENT_MARKERS = ("resource_exhausted", "resource exhausted", "out of memory")
+# the transient-failure markers (RESOURCE_EXHAUSTED and friends) are shared
+# with the guard layer — imported above as _TRANSIENT_MARKERS so both layers
+# agree on what "worth retrying" means
 
 
 def exec_cache() -> ExecutableCache:
@@ -222,6 +228,10 @@ def exec_cache() -> ExecutableCache:
 def classify_failure(exc: BaseException) -> str:
     """``"illegal"`` (expected: bad tile for this shape/memory) or
     ``"unexpected"`` (a real bug that deserves a log line)."""
+    if isinstance(exc, GuardTimeout):
+        # a watchdog-expired candidate is an expected hazard of tuning on
+        # live hardware, not a framework bug: charge inf quietly
+        return "illegal"
     if isinstance(exc, _BUG_EXC_TYPES):
         return "unexpected"
     msg = f"{type(exc).__name__}: {exc}".lower()
@@ -232,12 +242,10 @@ def _failure_is_deterministic(exc: BaseException) -> bool:
     """Whether a build failure may be cached for the process lifetime.
 
     Only clearly deterministic illegal-tile failures qualify; unexpected
-    errors and resource exhaustion (which can be an artifact of concurrent
-    compile load rather than the candidate itself) are retried on revisit."""
-    if classify_failure(exc) != "illegal":
-        return False
-    msg = f"{type(exc).__name__}: {exc}".lower()
-    return not any(m in msg for m in _TRANSIENT_MARKERS)
+    errors, watchdog timeouts, and resource exhaustion (which can all be
+    artifacts of concurrent compile load rather than the candidate itself)
+    are retried on revisit."""
+    return classify_failure(exc) == "illegal" and not is_transient_failure(exc)
 
 
 #: process-level cache of AOT-compiled kernel executables, keyed by
@@ -303,6 +311,8 @@ def tune_call(
     measure_stats: Optional[dict] = None,
     strategy: Optional[str] = None,
     warm_start: bool = True,
+    fault_policy: Optional[FaultPolicy] = None,
+    fault_plan=None,
     **kwargs,
 ):
     """Run a measured PATSMA search for this call context and commit the
@@ -358,6 +368,19 @@ def tune_call(
     shard-equivalence contract (a sharded sweep must reproduce the
     unsharded sweep's points) needs searches whose trajectories do not
     depend on the sweep's visiting order.
+
+    ``fault_policy`` (a :class:`~repro.core.guard.FaultPolicy`, default
+    ``None`` = unguarded, trajectory-identical to earlier releases) arms the
+    resilience layer: per-stage watchdog timeouts charge hung candidates
+    ``inf`` instead of wedging the run, transient failures
+    (RESOURCE_EXHAUSTED class) are retried in place with deterministic
+    backoff, a candidate failing ``max_failures`` times is quarantined
+    (skipped without a build, charged ``inf``), and with
+    ``sandbox_first_touch`` each never-seen candidate is crash-probed in a
+    forked child first so a hard crash is contained.  ``fault_plan`` injects
+    a deterministic :class:`~repro.testing.faults.FaultPlan` at the
+    ``"tune"``/``"build"``/``"cost"`` seams (``None`` reads the
+    ``REPRO_FAULT_PLAN`` env var — the chaos CI lane's hook).
     """
     import jax
 
@@ -374,18 +397,61 @@ def tune_call(
     ctx = key.encode()
     logged: set = set()  # distinct unexpected errors already reported
 
+    # --- resilience layer (all opt-in; None → identical trajectories)
+    if fault_plan is None:
+        from repro.testing.faults import active_plan
+
+        fault_plan = active_plan()
+    plan = fault_plan
+    fpol = fault_policy
+    quarantine = Quarantine(fpol.max_failures) if fpol is not None else None
+
+    def qkey(p: dict):
+        return tuple(sorted(p.items()))
+
+    if plan is not None:
+        plan.fire("tune", key=name)
+
+    fatal = None
+    if fpol is not None and fpol.fail_fast:
+        def fatal(e: BaseException) -> bool:
+            # a poisoned round: an error that is neither an expected illegal
+            # tile nor a load transient would hit every candidate identically
+            return classify_failure(e) == "unexpected" and not is_transient_failure(e)
+    compile_deadline = fpol.compile_deadline if fpol is not None else None
+
     def build_for(knobs: dict):
         def build():
+            if plan is not None:
+                plan.fire("build", key=knobs)
             fn = jax.jit(
                 lambda *xs: spec.fn(*xs, **kwargs, **knobs, interpret=interpret)
             )
             return fn.lower(*args).compile()
 
-        return build
+        if fpol is None:
+            return build
+
+        def probed():
+            if fpol.sandbox_first_touch:
+                # crash canary: a hard crash dies in a forked child and
+                # surfaces as SandboxCrash, charged inf by the layers above
+                sandboxed_probe(
+                    build, timeout=fpol.sandbox_timeout, label=f"{name}:{knobs}"
+                )
+            return build()
+
+        return fpol.wrap(probed, stage="compile", label=f"{name}:build")
 
     def note_failure(knobs: dict, exc: BaseException, stage: str) -> None:
         if isinstance(exc, (KeyboardInterrupt, SystemExit)):
             raise exc  # user interrupt, not a candidate failure
+        if quarantine is not None and quarantine.note_failure(qkey(knobs)):
+            if verbose:
+                print(
+                    f"[patsma] {name}: candidate {knobs} quarantined after "
+                    f"{quarantine.max_failures} failures"
+                )
         kind = classify_failure(exc)
         if kind == "unexpected":
             sig = (type(exc).__name__, str(exc).splitlines()[0] if str(exc) else "")
@@ -402,19 +468,45 @@ def tune_call(
     # fixed-path counters (the adaptive engine keeps its own): measure_stats
     # must report repetitions spent in either mode
     fixed_counts = {"rounds": 0, "candidates": 0, "measured": 0, "failed": 0,
-                    "reps": 0, "warmup_reps": 0}
+                    "reps": 0, "warmup_reps": 0, "timeouts": 0, "retried": 0}
 
     def measure_one(p, ex):
         if isinstance(ex, BaseException):
             note_failure(p, ex, "compile")
             fixed_counts["failed"] += 1
             return np.inf
+
+        def run():
+            if plan is not None:
+                plan.fire("cost", key=p)
+            return float(cost(ex, *args))
+
         try:
-            c = float(cost(ex, *args))
+            if fpol is not None and (
+                fpol.measure_timeout is not None or fpol.retries > 0
+            ):
+                c = guarded_call(
+                    run,
+                    timeout=fpol.measure_timeout,
+                    retries=fpol.retries,
+                    backoff=fpol.backoff,
+                    backoff_mult=fpol.backoff_mult,
+                    jitter=fpol.jitter,
+                    label=f"{name}:measure",
+                    on_retry=lambda *_: fixed_counts.__setitem__(
+                        "retried", fixed_counts["retried"] + 1
+                    ),
+                )
+            else:
+                c = run()
         except Exception as e:
+            if isinstance(e, GuardTimeout):
+                fixed_counts["timeouts"] += 1
             note_failure(p, e, "measure")
             fixed_counts["failed"] += 1
             return np.inf
+        if quarantine is not None:
+            quarantine.note_success(qkey(p))
         fixed_counts["measured"] += 1
         if isinstance(cost, RuntimeCost):
             fixed_counts["reps"] += len(cost.last_times)
@@ -437,32 +529,55 @@ def tune_call(
         # measured as soon as its executable is ready while i+1.. still
         # compile on the pool (``drain`` trades that overlap for unbiased
         # timings).
-        items = [((ctx, tuple(sorted(p.items()))), build_for(p)) for p in points]
         fixed_counts["rounds"] += 1
         fixed_counts["candidates"] += len(points)
-        if jobs <= 1 or len(items) <= 1:
-            compiled = compile_fanout(items, cache=_EXEC_CACHE, jobs=1)
-            return [measure_one(p, ex) for p, ex in zip(points, compiled)]
+        results: list = [None] * len(points)
+        live: list = []  # indices not quarantined
+        for i, p in enumerate(points):
+            if quarantine is not None and qkey(p) in quarantine:
+                results[i] = np.inf  # skipped outright: no build, no measure
+            else:
+                live.append(i)
+        items = [((ctx, qkey(points[i])), build_for(points[i])) for i in live]
+        if jobs <= 1 or len(items) <= 1 or compile_deadline is not None or fatal:
+            # the serial path — and, when a round deadline or fail-fast is
+            # armed, the managed fan-out (compile/measure overlap is traded
+            # for cancellable builds)
+            compiled = compile_fanout(
+                items,
+                cache=_EXEC_CACHE,
+                jobs=1 if jobs <= 1 else min(jobs, max(1, len(items))),
+                deadline=compile_deadline,
+                fatal=fatal,
+            )
+            for i, ex in zip(live, compiled):
+                results[i] = measure_one(points[i], ex)
+            return results
         from concurrent.futures import ThreadPoolExecutor, wait
 
-        out = []
         with ThreadPoolExecutor(max_workers=min(jobs, len(items))) as pool:
             futs = [pool.submit(_EXEC_CACHE.get_or_build, k, b) for k, b in items]
             if drain:  # no compile runs in the background of any measurement
                 wait(futs)
-            for p, f in zip(points, futs):
-                out.append(measure_one(p, f.result()))
-        return out
+            for i, f in zip(live, futs):
+                results[i] = measure_one(points[i], f.result())
+        return results
 
     # --- adaptive policy: racing engine over each compiled round
     analytic = bound_fn if bound_fn is not None else (
         _roofline_bound_for if cost_fn is None else None
     )
 
-    def make_rep(ex):
-        if cost_fn is not None:
-            return lambda: float(cost_fn(ex, *args))
-        return lambda: time_rep(ex, *args)
+    def make_rep(p, ex):
+        def rep():
+            if plan is not None:
+                plan.fire("cost", key=p)
+            t = float(cost_fn(ex, *args)) if cost_fn is not None else time_rep(ex, *args)
+            if quarantine is not None:
+                quarantine.note_success(qkey(p))
+            return t
+
+        return rep
 
     engine_policy = policy
     if cost_fn is not None and policy.mode == "adaptive" and not isinstance(
@@ -476,7 +591,7 @@ def tune_call(
         import dataclasses as _dc
 
         engine_policy = _dc.replace(policy, warmup=0, abs_noise=0.0)
-    engine = MeasureEngine(engine_policy)
+    engine = MeasureEngine(engine_policy, guard=fpol)
 
     def measure_batch_adaptive(points):
         # racing compares candidates *within* the round, so the round's
@@ -486,21 +601,33 @@ def tune_call(
             # a Portfolio strategy separates leads with the same noise floor
             # the engine calibrated for candidate racing
             at.optimizer.set_noise(engine.noise)
-        items = [((ctx, tuple(sorted(p.items()))), build_for(p)) for p in points]
-        compiled = compile_fanout(items, cache=_EXEC_CACHE,
-                                  jobs=min(jobs, max(1, len(items))))
+        live = [
+            i for i, p in enumerate(points)
+            if quarantine is None or qkey(p) not in quarantine
+        ]
+        items = [((ctx, qkey(points[i])), build_for(points[i])) for i in live]
+        compiled_live = compile_fanout(
+            items,
+            cache=_EXEC_CACHE,
+            jobs=min(jobs, max(1, len(items))),
+            deadline=compile_deadline,
+            fatal=fatal,
+        )
+        by_index = dict(zip(live, compiled_live))
         # bounds are only worth computing once a finite incumbent exists —
         # the prefilter is disabled before the first measured round anyway,
         # so round 1 never pays HLO cost analysis per candidate
         want_bounds = analytic is not None and math.isfinite(engine.best_measured)
         reps, bounds = [], []
-        for p, ex in zip(points, compiled):
-            if isinstance(ex, BaseException):
-                note_failure(p, ex, "compile")
+        for i, p in enumerate(points):
+            ex = by_index.get(i)  # quarantined candidates never compiled
+            if ex is None or isinstance(ex, BaseException):
+                if ex is not None:
+                    note_failure(p, ex, "compile")
                 reps.append(None)
                 bounds.append(None)
             else:
-                reps.append(make_rep(ex))
+                reps.append(make_rep(p, ex))
                 bounds.append(analytic(p, ex) if want_bounds else None)
         engine.on_error = lambda i, e: note_failure(points[i], e, "measure")
         return engine.measure_round(reps, bounds=bounds)
@@ -534,6 +661,10 @@ def tune_call(
                 stats["noise_abs_floor"] = engine.noise.abs_floor
                 stats["noise_rel"] = engine.noise.rel
         stats["mode"] = policy.mode
+        if quarantine is not None:
+            stats["quarantined"] = quarantine.stats()["quarantined"]
+        if plan is not None:
+            stats["faults_fired"] = plan.count()
         measure_stats.update(stats)
     return db.get(key)
 

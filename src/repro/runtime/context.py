@@ -95,7 +95,11 @@ class RouteSpec:
     :func:`repro.core.strategy.make_strategy`) used to build each context's
     search; with a staged strategy, environment drift (level 1) re-tunes
     through the refinement stage alone.  ``optimizer`` (a ``space -> opt``
-    factory) overrides it.
+    factory) overrides it.  ``breaker`` (kwargs dict for a
+    :class:`~repro.core.guard.CircuitBreaker`, e.g. ``{"threshold": 3,
+    "cooldown": 8}``) arms per-context explore gating: each context gets its
+    own breaker, so one failing shape-bucket stops burning ε-credits without
+    suspending its healthy siblings; ``None`` disables gating.
     """
 
     name: str
@@ -112,6 +116,7 @@ class RouteSpec:
     drift: Optional[dict] = dataclasses.field(default_factory=dict)
     extra: dict = dataclasses.field(default_factory=dict)
     measure: Any = None  # explore repetition policy (None = classic)
+    breaker: Optional[dict] = None  # CircuitBreaker kwargs (None = no gating)
 
 
 class ContextRouter:
@@ -250,6 +255,9 @@ class ContextRouter:
                 default_point=default_point,
                 name=enc,  # executables are keyed per-context + exact shapes
                 measure=spec.measure,
+                # a fresh breaker per context: failure storms are gated where
+                # they happen, not across the whole route
+                breaker=dict(spec.breaker) if spec.breaker is not None else None,
             )
             self._tuners[enc] = t
         if sig is not None:
@@ -321,6 +329,7 @@ class ContextRouter:
             "deferred_explores": 0,
             "inband_builds": 0,
             "candidate_failures": 0,
+            "breaker_denied": 0,
             "drift_resets": 0,
             "searches_completed": 0,
         }
@@ -328,7 +337,8 @@ class ContextRouter:
             for k in (
                 "calls", "explores", "exploits", "explore_candidates",
                 "culled_explores", "deferred_explores", "inband_builds",
-                "candidate_failures", "drift_resets", "searches_completed",
+                "candidate_failures", "breaker_denied", "drift_resets",
+                "searches_completed",
             ):
                 total[k] += t.stats_[k]
         total["cache"] = self.cache.stats()

@@ -59,7 +59,7 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core import Autotuning, ExecutableCache
+from repro.core import Autotuning, CircuitBreaker, ExecutableCache
 from repro.core.measure import NoiseEstimate, resolve_measure_policy, summarize
 
 from .drift import DriftDetector
@@ -121,6 +121,15 @@ class OnlineTuner:
         (:class:`~repro.core.measure.MeasurePolicy`, ``"adaptive"``, or
         ``"fixed"``).  ``None`` keeps the classic behaviour: every explore
         request is one full candidate evaluation.
+    breaker:
+        Optional :class:`~repro.core.guard.CircuitBreaker` (or a kwargs dict
+        for one).  A context whose explores keep failing — builds erroring,
+        measured costs coming back non-finite — trips the breaker: explores
+        and failed-candidate absorption are suspended (the incumbent/default
+        keeps serving, no ε-credits burn) until the count-based cooldown
+        lapses, then half-open probes decide whether exploration resumes.
+        Denied calls do not advance the ε-episode, so recovery does not
+        start with a burst of catch-up explores.
     """
 
     def __init__(
@@ -137,6 +146,7 @@ class OnlineTuner:
         default_point: Optional[dict] = None,
         name: str = "online",
         measure=None,
+        breaker=None,
     ) -> None:
         if not 0.0 <= epsilon <= 1.0:
             raise ValueError(f"epsilon must be in [0, 1], got {epsilon}")
@@ -167,6 +177,9 @@ class OnlineTuner:
         self._episode_explores = 0
         # multi-rep explore measurement (None → one request per candidate)
         self.measure = None if measure is None else resolve_measure_policy(measure)
+        if isinstance(breaker, dict):
+            breaker = CircuitBreaker(**breaker)
+        self.breaker: Optional[CircuitBreaker] = breaker
         self._rep_times: list = []  # current explore candidate's observed reps
         self._rep_key = None  # space.key of the candidate being repped
         self.events: list = []  # drift resets, with context
@@ -180,6 +193,7 @@ class OnlineTuner:
             "inband_builds": 0,  # builds that ran on the serving thread (must stay 0)
             "compiles_submitted": 0,
             "candidate_failures": 0,  # candidates charged inf for a failed build
+            "breaker_denied": 0,  # calls whose exploration the breaker blocked
             "drift_resets": 0,
             "searches_completed": 0,
         }
@@ -208,6 +222,8 @@ class OnlineTuner:
             out["cache"] = self._cache.stats()
         if self.drift is not None:
             out["drift"] = self.drift.stats()
+        if self.breaker is not None:
+            out["breaker"] = self.breaker.stats()
         return out
 
     # -------------------------------------------------------- build plumbing
@@ -322,9 +338,15 @@ class OnlineTuner:
             if not ready or not isinstance(ex, BaseException):
                 return
             self.stats_["candidate_failures"] += 1
-            self.at.skip(np.inf)
+            if self.breaker is not None:
+                self.breaker.record_failure()
+            self.at.skip(np.inf, reason="build-failed")
             if self.at.finished:
                 self._on_search_complete()
+                return
+            if self.breaker is not None and self.breaker.state != CircuitBreaker.CLOSED:
+                # the breaker tripped mid-absorb: stop charging candidates —
+                # a failure storm should suspend the search, not drain it
                 return
 
     def executable_for(self, point: dict, *args, **kwargs):
@@ -367,10 +389,18 @@ class OnlineTuner:
         self.stats_["calls"] += 1
         at = self.at
         admit = self._note_signature(args, kwargs) if self._build is not None else True
-        if not at.finished:
+        gate = True
+        if self.breaker is not None and not at.finished:
+            # one gate decision per serving call: a denied call neither
+            # explores nor absorbs failures nor advances the ε-episode —
+            # the context serves its incumbent and the cooldown ticks
+            gate = self.breaker.allow()
+            if not gate:
+                self.stats_["breaker_denied"] += 1
+        if not at.finished and gate:
             self._episode_calls += 1
             self._absorb_failed_candidates(args, kwargs, admit=admit)
-        if not at.finished and (_force_explore or self._want_explore()):
+        if not at.finished and gate and (_force_explore or self._want_explore()):
             ready, ex = self._ready(at.point, args, kwargs, admit=admit or _force_explore)
             if ready and not isinstance(ex, BaseException):
                 self._episode_explores += 1
@@ -399,6 +429,11 @@ class OnlineTuner:
         cost = float(cost)
         at = self.at
         if decision.kind == EXPLORE:
+            if self.breaker is not None:
+                if np.isfinite(cost):
+                    self.breaker.record_success()
+                else:
+                    self.breaker.record_failure()
             if not at.finished:
                 if self.measure is None:
                     self.stats_["explore_candidates"] += 1

@@ -15,7 +15,9 @@ One front door for every offline tuning workflow::
 * ``db merge`` — fold shard DBs into one, resolving per-key conflicts with
   the fleet's total-order keep-better rule
   (:func:`repro.tuning.fleet.merge_dbs`): associative, order-independent,
-  and identical to what ``Autotuning.commit()`` would have kept.
+  and identical to what ``Autotuning.commit()`` would have kept.  Sources
+  may also be run journals (``<db>.journal``) from workers that died
+  mid-sweep — their committed records fold, interrupted cases are absent.
 * ``db list`` — the records of a DB; ``--grid`` shows the registered
   pretune grid with per-case hit status instead (absorbing the historical
   ``pretune --list``), ``--shard i/n`` restricts either view to one fleet
@@ -49,6 +51,19 @@ def _open_db(path: str, *, must_exist: bool = True, autosave: bool = True):
     return TuningDB(path, autosave=autosave)
 
 
+def _open_source(path: str):
+    """A merge source: a tuning DB file, or a run journal (``<db>.journal``)
+    from a sweep that may have died mid-measurement — its committed records
+    fold like any shard DB, interrupted cases are simply absent."""
+    from repro.tuning import RunJournal
+
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no tuning DB at {path}")
+    if RunJournal.is_journal(path):
+        return RunJournal(path).to_db()
+    return _open_db(path)
+
+
 # ------------------------------------------------------------------ db merge
 def _db_merge(argv) -> int:
     ap = argparse.ArgumentParser(
@@ -56,14 +71,19 @@ def _db_merge(argv) -> int:
         description="fold shard DBs into one, keep-better per key",
     )
     ap.add_argument("--out", required=True, help="destination DB (created/updated)")
-    ap.add_argument("sources", nargs="+", metavar="SRC", help="shard DB file(s)")
+    ap.add_argument(
+        "sources", nargs="+", metavar="SRC",
+        help="shard DB file(s) and/or run journals (<db>.journal) from "
+             "workers that died mid-sweep — a journal's committed records "
+             "fold like any shard DB",
+    )
     args = ap.parse_args(argv)
 
     from repro.tuning import TuningDB
     from repro.tuning.fleet import merge_dbs
 
     try:
-        sources = [_open_db(p) for p in args.sources]
+        sources = [_open_source(p) for p in args.sources]
     except FileNotFoundError as e:
         print(f"db merge: {e}", file=sys.stderr)
         return 2

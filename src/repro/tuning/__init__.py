@@ -21,7 +21,7 @@ user needs — :class:`Autotuning`, :func:`tune_call`, :func:`make_strategy`,
 resolve lazily (PEP 562): ``repro.kernels`` itself imports ``repro.tuning``,
 so eager re-exports would cycle.
 """
-from .db import ENV_DB_PATH, TuningDB, default_db
+from .db import ENV_DB_PATH, RunJournal, TuningDB, default_db
 from .fleet import (
     FleetResult,
     MergeStats,
@@ -47,6 +47,7 @@ from .warm_start import apply_warm_start, record_from
 __all__ = [
     "SCHEMA_VERSION",
     "ENV_DB_PATH",
+    "RunJournal",
     "TuningDB",
     "TuningKey",
     "TuningRecord",

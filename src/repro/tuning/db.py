@@ -16,6 +16,13 @@ Layout (versioned)::
 * **Schema gating** — a future-schema file is left untouched on disk and
   ignored in memory.
 
+:class:`RunJournal` is the write-ahead companion for long sweeps
+(``pretune``): an append-only JSONL file next to the DB recording, per case,
+a ``start`` event before measurement and a ``commit``/``failed`` event after
+— each append fsynced, torn trailing lines tolerated on load.  A killed run
+restarts with ``--resume`` re-measuring nothing already committed, and
+``repro.tune db merge`` folds a partial journal like any shard DB.
+
 ``default_db()`` gives library call sites (the kernels' ``autotuned`` entry
 point) a process-wide DB without plumbing: file-backed when the
 ``REPRO_TUNING_DB`` env var names a path, otherwise in-memory.
@@ -31,7 +38,24 @@ from typing import Optional, Tuple
 
 from .records import SCHEMA_VERSION, TuningKey, TuningRecord
 
-__all__ = ["TuningDB", "default_db"]
+__all__ = ["TuningDB", "RunJournal", "default_db"]
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a just-renamed/just-created entry is durable —
+    without it, a power loss after ``os.replace`` can resurrect the old file
+    (the rename lived only in the directory's page cache).  Best-effort:
+    platforms that cannot open directories (Windows) skip silently."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - non-POSIX
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - fs without dir fsync
+        pass
+    finally:
+        os.close(fd)
 
 #: env var naming the process-default DB file
 ENV_DB_PATH = "REPRO_TUNING_DB"
@@ -104,6 +128,10 @@ class TuningDB:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self.path)
+            # durability needs the *rename* on disk too, not just the bytes:
+            # fsync the containing directory or a crash can resurrect the
+            # old file contents
+            _fsync_dir(d)
         except BaseException:
             try:
                 os.unlink(tmp)
@@ -179,6 +207,167 @@ class TuningDB:
         if self.autosave and self.path is not None:
             self.save()
         return n
+
+
+# ----------------------------------------------------------- run journal
+class RunJournal:
+    """Append-only write-ahead journal for a tuning sweep.
+
+    One JSONL event per line, each append flushed *and fsynced* before the
+    sweep proceeds — the journal is the authority on which cases completed,
+    so it must hit the disk before the work it describes is assumed done:
+
+    * ``{"event": "start",  "key": <encoded>}`` — measurement is about to
+      begin for this case; a start with no matching commit/failed marks a
+      run that died mid-measurement (*interrupted*).
+    * ``{"event": "commit", "key": <encoded>, "record": {...}}`` — the
+      case's committed :class:`TuningRecord` (full JSON, so a journal alone
+      can reconstruct a DB — ``repro.tune db merge`` accepts journals as
+      sources).
+    * ``{"event": "failed", "key": <encoded>, "error": "..."}`` — the case
+      completed with no record (e.g. every candidate crashed).  Resumes skip
+      it rather than re-dying.
+    * ``{"event": "resume"}`` — a ``--resume`` run re-attached.
+
+    Loading tolerates a torn trailing line (power loss mid-append): the
+    dangling tail is treated as absent, never as corruption of the whole
+    journal.  The conventional location is :meth:`path_for` (``<db>.journal``).
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = os.fspath(path)
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+
+    @staticmethod
+    def path_for(db_path: str) -> str:
+        """The conventional journal location for a DB file."""
+        return os.fspath(db_path) + ".journal"
+
+    # ------------------------------------------------------------- writing
+    def append(self, event: dict) -> None:
+        """Durably append one event (fsync before returning; on a fresh
+        journal the containing directory is fsynced too so the file itself
+        survives a crash)."""
+        line = json.dumps(event, sort_keys=True, default=repr)
+        fresh = not os.path.exists(self.path)
+        with open(self.path, "a", encoding="utf-8") as f:
+            f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        if fresh:
+            _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+
+    def start(self, key) -> None:
+        self.append({"event": "start", "key": self._enc(key)})
+
+    def commit(self, key, record: TuningRecord) -> None:
+        self.append(
+            {"event": "commit", "key": self._enc(key), "record": record.to_json()}
+        )
+
+    def failed(self, key, error: BaseException | str) -> None:
+        self.append({"event": "failed", "key": self._enc(key), "error": str(error)})
+
+    def resume(self) -> None:
+        self.append({"event": "resume"})
+
+    @staticmethod
+    def _enc(key) -> str:
+        return key.encode() if isinstance(key, TuningKey) else str(key)
+
+    # ------------------------------------------------------------- reading
+    def events(self) -> list:
+        """Parsed events, in order.  A line that fails to parse ends the
+        journal (append-only: anything after a torn line is unreachable
+        anyway); the cut is reported once on stderr."""
+        if not os.path.exists(self.path):
+            return []
+        out: list = []
+        with open(self.path, "r", encoding="utf-8") as f:
+            for i, line in enumerate(f):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    ev = json.loads(line)
+                except ValueError:
+                    print(
+                        f"[tuning] {self.path}: torn/garbled journal line "
+                        f"{i + 1}; keeping the {len(out)} events before it",
+                        file=sys.stderr,
+                    )
+                    break
+                if isinstance(ev, dict) and "event" in ev:
+                    out.append(ev)
+        return out
+
+    def summary(self) -> dict:
+        """Digest of the journal's state::
+
+            {"committed": {key: record_json}, "failed": {key, ...},
+             "interrupted": {key, ...}, "resumes": int}
+
+        ``interrupted`` = started but neither committed nor failed — the
+        cases a killed run was measuring; a resume re-runs exactly these
+        (plus never-started ones) and re-measures nothing committed."""
+        committed: dict = {}
+        failed: set = set()
+        started: set = set()
+        resumes = 0
+        for ev in self.events():
+            kind = ev.get("event")
+            key = ev.get("key")
+            if kind == "start" and key is not None:
+                started.add(key)
+            elif kind == "commit" and key is not None:
+                committed[key] = ev.get("record")
+                failed.discard(key)
+            elif kind == "failed" and key is not None:
+                if key not in committed:
+                    failed.add(key)
+            elif kind == "resume":
+                resumes += 1
+        return {
+            "committed": committed,
+            "failed": failed,
+            "interrupted": started - set(committed) - failed,
+            "resumes": resumes,
+        }
+
+    @staticmethod
+    def is_journal(path: str) -> bool:
+        """Sniff: does ``path`` look like a run journal (first non-empty
+        line a JSON object with an ``"event"`` key)?  Lets CLI commands
+        accept DB files and journals interchangeably."""
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    ev = json.loads(line)
+                    return isinstance(ev, dict) and "event" in ev
+        except (OSError, ValueError):
+            return False
+        return False
+
+    def to_db(self) -> TuningDB:
+        """An in-memory :class:`TuningDB` of the journal's committed
+        records — the shape ``merge_dbs`` folds."""
+        db = TuningDB(path=None)
+        for rec_json in self.summary()["committed"].values():
+            if rec_json is None:
+                continue
+            try:
+                db.put(TuningRecord.from_json(rec_json), save=False)
+            except Exception as e:
+                print(
+                    f"[tuning] {self.path}: unreadable committed record "
+                    f"({e!r}); skipping",
+                    file=sys.stderr,
+                )
+        return db
 
 
 _default: Optional[TuningDB] = None

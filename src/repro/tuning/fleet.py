@@ -57,6 +57,7 @@ __all__ = [
     "merge_records",
     "MergeStats",
     "merge_dbs",
+    "journal_to_db",
     "FleetResult",
     "ShardedPortfolio",
     "device_bound_measure",
@@ -204,6 +205,18 @@ def merge_dbs(dest, sources) -> MergeStats:
     if dest.autosave and dest.path is not None:
         dest.save()
     return stats
+
+
+def journal_to_db(path: str):
+    """The committed records of a run journal (``<db>.journal``) as an
+    in-memory :class:`~repro.tuning.db.TuningDB` — the shape
+    :func:`merge_dbs` folds.  This is how a fleet merge adopts the completed
+    work of a shard that died mid-sweep: committed cases count, the
+    interrupted case it was measuring is simply absent (and re-measured by
+    that shard's ``pretune --resume``)."""
+    from .db import RunJournal
+
+    return RunJournal(path).to_db()
 
 
 # ------------------------------------------------------- sharded portfolio

@@ -21,6 +21,14 @@ wall-clock measurement for the candidate's deterministic roofline bound and
 ``--no-warm-start`` removes sweep-order dependence, together making a
 sharded sweep bit-reproduce the unsharded one (the CI equivalence lane).
 
+**Crash resume**: every sweep writes a write-ahead journal next to the DB
+(``<db>.journal`` — one fsynced JSONL event per case: ``start`` before
+measurement, ``commit``/``failed`` after).  A worker killed mid-sweep
+restarts with ``--resume`` and re-measures nothing already completed; the
+journal's committed records also reconstruct the DB if the kill tore the
+final save, and ``python -m repro.tune db merge`` accepts partial journals
+as sources directly.
+
 Sweeps the registered (kernel, shape) grid, runs the PATSMA search per
 context, and commits every record atomically.  Each context's candidate
 rounds are AOT-compiled concurrently (``--jobs`` threads; measurement stays
@@ -287,6 +295,12 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
              "independent of sweep order and of what the DB already holds "
              "(required for exact shard-equivalence)",
     )
+    ap.add_argument(
+        "--resume", action="store_true",
+        help="resume a killed sweep from its run journal (<db>.journal): "
+             "cases already committed or failed are skipped, only "
+             "interrupted and never-started cases are (re-)measured",
+    )
     args = ap.parse_args(argv)
 
     from repro.kernels.autotuned import exec_cache, registered, tune_call
@@ -325,15 +339,50 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
         return _list_grid(cases, db, interpret=not args.no_interpret)
 
     cost_fn = _analytic_cost_fn() if args.cost == "analytic" else None
+
+    # write-ahead run journal: 'start' before each case's measurement,
+    # 'commit'/'failed' after — a killed shard restarts with --resume
+    # re-measuring nothing already completed
+    import os
+
+    from repro.tuning import RunJournal
+
+    jpath = RunJournal.path_for(args.db)
+    done_keys: set = set()
+    if args.resume:
+        journal = RunJournal(jpath)
+        s = journal.summary()
+        done_keys = set(s["committed"]) | set(s["failed"])
+        if s["committed"]:
+            # belt-and-braces: the journal carries full committed records, so
+            # even a DB save torn by the kill is reconstructed here
+            db.merge(journal.to_db())
+        journal.resume()
+        print(
+            f"pretune: resume from {jpath}: {len(s['committed'])} committed, "
+            f"{len(s['failed'])} failed, {len(s['interrupted'])} interrupted; "
+            f"skipping {len(done_keys)} completed cases"
+        )
+    else:
+        if os.path.exists(jpath):
+            os.remove(jpath)  # a fresh sweep owns a fresh journal
+        journal = RunJournal(jpath)
+
     n_done = 0
+    n_skipped = 0
     t_all = time.perf_counter()
     # aggregate measurement-engine counters across the sweep (run summary)
     totals = {"reps": 0, "warmup_reps": 0, "calibration_reps": 0,
               "culled": 0, "pruned_roofline": 0, "measured": 0, "failed": 0}
     for name, label, build in cases:
         call_args = build()
+        key = _case_key(name, call_args, interpret=not args.no_interpret)
+        if key.encode() in done_keys:
+            n_skipped += 1
+            continue
         t0 = time.perf_counter()
         mstats: dict = {}
+        journal.start(key)
         rec = tune_call(
             name,
             *call_args,
@@ -354,9 +403,11 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
         for k in totals:
             totals[k] += int(mstats.get(k, 0))
         if rec is None:
+            journal.failed(key, "every candidate failed")
             print(f"  {name}/{label}: every candidate failed; nothing stored ({dt:.1f}s)",
                   file=sys.stderr)
             continue
+        journal.commit(key, rec)
         crashed = f" crashed={rec.crashed}" if rec.crashed else ""
         strat = f" strategy={rec.strategy}" if rec.strategy and rec.strategy != "csa" else ""
         raced = ""
@@ -371,8 +422,9 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
         n_done += 1
     db.save()
     cs = exec_cache().stats()
+    skipped = f", {n_skipped} resumed-as-done" if n_skipped else ""
     print(
-        f"pretune: {n_done} contexts tuned, {len(db)} records in {args.db} "
+        f"pretune: {n_done} contexts tuned{skipped}, {len(db)} records in {args.db} "
         f"({time.perf_counter() - t_all:.1f}s); exec cache: {cs['misses']} compiles, "
         f"{cs['hits']} hits, {cs['recompiles']} recompiles"
     )
