@@ -34,6 +34,7 @@ BENCHES = [
     "fleet_sharding",  # fleet: ShardedPortfolio wall-clock vs serial Portfolio
     "online_adaptation",  # runtime: adaptation latency/regret on a workload shift
     "fault_recovery",  # resilience: search under injected faults; guard overhead
+    "obs_overhead",  # observability: tuning throughput obs off vs on (gate 1.05)
     "step_autotune",  # §2.4: exec modes on a real train step
     "grad_compression",  # DESIGN §7: compressed DP reduction
     "roofline",  # §Roofline report from the dry-run JSONL

@@ -37,6 +37,12 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.obs import events as _events
+from repro.obs.log import get_logger
+from repro.obs.trace import tracer as _tracer
+
+log = get_logger(__name__)
+
 from .csa import CSA
 from .nelder_mead import NelderMead
 from .optimizer import NumericalOptimizer
@@ -176,18 +182,34 @@ class Autotuning:
                 self._db_hit = rec
                 self._point = dict(rec.point)
                 if self.verbose:
-                    print(f"[patsma] db hit {rec.point} (cost {rec.cost:.6g}); skipping tuning")
+                    log.info("db hit %s (cost %.6g); skipping tuning",
+                             rec.point, rec.cost)
+                _events.emit("warm_start", name=self.ctx_name(),
+                             kind="exact", point=dict(rec.point))
                 return  # finished before the first measurement
             if rec is not None:
                 from repro.tuning.warm_start import apply_warm_start
 
                 self._db_seeded = apply_warm_start(self.space, self.optimizer, rec)
-                if self.verbose and self._db_seeded:
-                    print(f"[patsma] warm start from neighbor {rec.point}")
+                if self._db_seeded:
+                    if self.verbose:
+                        log.info("warm start from neighbor %s", rec.point)
+                    _events.emit("warm_start", name=self.ctx_name(),
+                                 kind="neighbor", point=dict(rec.point))
         # prime: first run() call's cost is ignored by contract
         self._z = self.optimizer.run(np.nan)
         self._point = self.space.decode(self._z)
         self._advance_through_cache()
+
+    def ctx_name(self) -> str:
+        """Stable label for this search in spans and the obs event stream
+        (the DB key's name + shapes when tuning a fingerprinted context)."""
+        if self.key is not None:
+            try:
+                return f"{self.key.name}{self.key.shapes()}"
+            except Exception:
+                return str(getattr(self.key, "name", self.key))
+        return f"search@{id(self):x}"
 
     # ----------------------------------------------------------- properties
     @property
@@ -393,7 +415,13 @@ class Autotuning:
             if reason is not None:
                 self.skip_reasons[reason] = self.skip_reasons.get(reason, 0) + 1
                 if self.verbose:
-                    print(f"[patsma] skip {self._point} ({reason})")
+                    log.info("skip %s (%s)", self._point, reason)
+                if reason == "quarantined":
+                    _events.emit("candidate_quarantined",
+                                 name=self.ctx_name(), point=dict(self._point))
+                else:
+                    _events.emit("candidate_skipped", name=self.ctx_name(),
+                                 point=dict(self._point), reason=str(reason))
             self._deliver(float(cost), cacheable=False)
         return self.point
 
@@ -428,7 +456,7 @@ class Autotuning:
         self._evals += 1
         self._history.append((dict(self._point), float(cost)))
         if self.verbose:
-            print(f"[patsma] eval#{self._evals} {self._point} -> {cost:.6g}")
+            log.info("eval#%d %s -> %.6g", self._evals, self._point, cost)
         self._z = self.optimizer.run(cost)
         self._point = self.space.decode(self._z)
         self._ignore_left = self.ignore
@@ -493,7 +521,10 @@ class Autotuning:
                 if keep:
                     self._committed = True  # nothing better to say for this run
                     return False
-        self.db.put(rec)
+        with _tracer().span("commit"):
+            self.db.put(rec)
+        _events.emit("db_commit", name=self.ctx_name(),
+                     point=dict(rec.point), cost=rec.cost)
         self._committed = True
         return True
 
@@ -579,85 +610,107 @@ class Autotuning:
         every point that was actually measured, including speculative probes
         the optimizer discarded.
         """
-        while not self.finished:
-            zs = self.optimizer.ask()
-            if not zs:
-                break
-            points = [self.space.decode(z) for z in zs]
-            keys = [self.space.key(p) for p in points]
-            self._z = zs[0]
-            self._point = dict(points[0])
-            # unique decoded points, in first-seen order
-            unique: dict = {}
-            for k, p in zip(keys, points):
-                unique.setdefault(k, p)
-            to_measure = [
-                k for k in unique
-                if not (self._use_cache and k in self._cost_cache)
-            ]
-            measured: dict = {}
-            if to_measure:
-                pts = [dict(unique[k]) for k in to_measure]
-                for _ in range(self.ignore):  # stabilization (paper `ignore`)
-                    measure_batch([dict(p) for p in pts])
-                    self._measurements += len(pts)
-                costs = list(measure_batch([dict(p) for p in pts]))
-                if len(costs) != len(pts):
-                    raise ValueError(
-                        f"measure_batch returned {len(costs)} costs for {len(pts)} points"
-                    )
-                from .measure import MeasureResult
-
-                measured = {}
-                for k, c in zip(to_measure, costs):
-                    if isinstance(c, MeasureResult):
-                        prev = self._measure_meta.get(k)
-                        if (
-                            c.pruned is not None
-                            and prev is not None
-                            and prev.get("pruned") is None
-                            and k in self._measured_costs
-                        ):
-                            # the point was *really* measured in an earlier
-                            # round — typically by a previous pipeline stage —
-                            # and a later revisit came back analytically
-                            # pruned (the engine's incumbent moved on).  The
-                            # optimistic lower bound must not clobber the
-                            # real measurement: keep the stored meta and
-                            # deliver the measured cost, or the next stage
-                            # would sit on a bound it can never realize.
-                            measured[k] = self._measured_costs[k]
-                        else:
-                            measured[k] = float(c.cost)
-                            self._measure_meta[k] = c.meta()
-                            if c.pruned is None and np.isfinite(c.cost):
-                                self._measured_costs[k] = float(c.cost)
-                        # pruned/failed candidates honestly spent zero reps
-                        self._measurements += int(c.repeats_spent)
-                    else:
-                        measured[k] = float(c)
-                        if np.isfinite(c):
-                            self._measured_costs[k] = float(c)
-                        self._measurements += 1
-            full = []
-            for k, p in zip(keys, points):
-                # measured this round, or answered by the cross-round cache
-                c = measured[k] if k in measured else self._cost_cache[k]
-                if self._use_cache:
-                    self._cost_cache[k] = c
-                self._evals += 1
-                self._history.append((dict(p), float(c)))
-                if self.verbose:
-                    print(f"[patsma] eval#{self._evals} {p} -> {c:.6g}")
-                full.append(c)
-            self.optimizer.tell(full)
+        ctx = self.ctx_name()
+        _events.emit("search_start", name=ctx)
+        with _tracer().span("search", ctx=ctx):
+            rounds = self._batch_loop(measure_batch)
         # expose the final solution as the current point (as the sequential
         # staging does once the optimizer ends) and persist it
         if self._db_hit is None and self.optimizer.is_end():
             self._z = self.optimizer.best_solution
             self._point = self.space.decode(self._z)
         self.commit()
+        _events.emit(
+            "search_end", name=ctx,
+            best_point=dict(self.best_point) if self.best_point else None,
+            best_cost=self.best_cost, evals=self._evals, rounds=rounds,
+        )
         return self.point
+
+    def _batch_loop(self, measure_batch: Callable) -> int:
+        """The ask → dedup → measure → tell rounds of
+        :meth:`entire_exec_batch`; returns how many rounds ran.  Each round
+        runs under a ``round`` span so worker-side compile/measure spans
+        nest where they belong."""
+        round_no = 0
+        while not self.finished:
+            zs = self.optimizer.ask()
+            if not zs:
+                break
+            round_no += 1
+            with _tracer().span("round", round=round_no):
+                self._batch_round(zs, measure_batch)
+        return round_no
+
+    def _batch_round(self, zs, measure_batch: Callable) -> None:
+        points = [self.space.decode(z) for z in zs]
+        keys = [self.space.key(p) for p in points]
+        self._z = zs[0]
+        self._point = dict(points[0])
+        # unique decoded points, in first-seen order
+        unique: dict = {}
+        for k, p in zip(keys, points):
+            unique.setdefault(k, p)
+        to_measure = [
+            k for k in unique
+            if not (self._use_cache and k in self._cost_cache)
+        ]
+        measured: dict = {}
+        if to_measure:
+            pts = [dict(unique[k]) for k in to_measure]
+            for _ in range(self.ignore):  # stabilization (paper `ignore`)
+                measure_batch([dict(p) for p in pts])
+                self._measurements += len(pts)
+            costs = list(measure_batch([dict(p) for p in pts]))
+            if len(costs) != len(pts):
+                raise ValueError(
+                    f"measure_batch returned {len(costs)} costs for {len(pts)} points"
+                )
+            from .measure import MeasureResult
+
+            measured = {}
+            for k, c in zip(to_measure, costs):
+                if isinstance(c, MeasureResult):
+                    prev = self._measure_meta.get(k)
+                    if (
+                        c.pruned is not None
+                        and prev is not None
+                        and prev.get("pruned") is None
+                        and k in self._measured_costs
+                    ):
+                        # the point was *really* measured in an earlier
+                        # round — typically by a previous pipeline stage —
+                        # and a later revisit came back analytically
+                        # pruned (the engine's incumbent moved on).  The
+                        # optimistic lower bound must not clobber the
+                        # real measurement: keep the stored meta and
+                        # deliver the measured cost, or the next stage
+                        # would sit on a bound it can never realize.
+                        measured[k] = self._measured_costs[k]
+                    else:
+                        measured[k] = float(c.cost)
+                        self._measure_meta[k] = c.meta()
+                        if c.pruned is None and np.isfinite(c.cost):
+                            self._measured_costs[k] = float(c.cost)
+                    # pruned/failed candidates honestly spent zero reps
+                    self._measurements += int(c.repeats_spent)
+                else:
+                    measured[k] = float(c)
+                    if np.isfinite(c):
+                        self._measured_costs[k] = float(c)
+                    self._measurements += 1
+        full = []
+        for k, p in zip(keys, points):
+            # measured this round, or answered by the cross-round cache
+            c = measured[k] if k in measured else self._cost_cache[k]
+            if self._use_cache:
+                self._cost_cache[k] = c
+            self._evals += 1
+            self._history.append((dict(p), float(c)))
+            if self.verbose:
+                log.info("eval#%d %s -> %.6g", self._evals, p, c)
+            full.append(c)
+        self.optimizer.tell(full)
 
     @staticmethod
     def _point_args(point: dict) -> tuple:

@@ -30,6 +30,9 @@ from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor
 from concurrent.futures import wait as futures_wait
 from typing import Any, Callable, Hashable, List, Optional, Sequence, Tuple
 
+from repro.obs import metrics as _metrics
+from repro.obs.trace import tracer as _tracer
+
 __all__ = [
     "HardwareSpec",
     "TPU_V5E",
@@ -166,10 +169,12 @@ class ExecutableCache:
         self._lock = threading.Lock()
         self._entries: "OrderedDict[Hashable, Future]" = OrderedDict()
         self._built: set = set()  # keys ever built (recompile accounting)
-        self.hits = 0
-        self.misses = 0
-        self.recompiles = 0
-        self.evictions = 0
+        # lookup accounting on the obs metric primitive (repro.obs.metrics):
+        # stats() below is a snapshot of these counters, not a parallel copy
+        self.hits = _metrics.Counter()
+        self.misses = _metrics.Counter()
+        self.recompiles = _metrics.Counter()
+        self.evictions = _metrics.Counter()
 
     def __len__(self) -> int:
         with self._lock:
@@ -182,26 +187,28 @@ class ExecutableCache:
         with self._lock:
             fut = self._entries.get(key)
             if fut is not None:
-                self.hits += 1
+                self.hits.inc()
                 self._entries.move_to_end(key)
                 owner = False
             else:
                 fut = Future()
                 self._entries[key] = fut
-                self.misses += 1
+                self.misses.inc()
                 if key in self._built:
-                    self.recompiles += 1
+                    self.recompiles.inc()
                 self._built.add(key)
                 owner = True
                 while len(self._entries) > self.maxsize:
                     self._entries.popitem(last=False)
-                    self.evictions += 1
+                    self.evictions.inc()
         if owner:
+            t_build = time.perf_counter()
             try:
                 run = self._guard(build) if self._guard is not None else build
                 result: Any = run()
             except Exception as e:  # cached: deterministic for a fixed context
                 result = e
+                _metrics.counter("compile.failed").inc()
                 if self._cache_failures is not None and not self._cache_failures(e):
                     # possibly transient: answer current waiters with the
                     # error but drop the entry so a revisit rebuilds
@@ -218,6 +225,10 @@ class ExecutableCache:
                     self._built.discard(key)
                 fut.set_result(e)
                 raise
+            if not isinstance(result, BaseException):
+                _metrics.histogram("compile.seconds").observe(
+                    time.perf_counter() - t_build
+                )
             fut.set_result(result)
         return fut.result()
 
@@ -237,17 +248,18 @@ class ExecutableCache:
         with self._lock:
             return {
                 "size": len(self._entries),
-                "hits": self.hits,
-                "misses": self.misses,
-                "recompiles": self.recompiles,
-                "evictions": self.evictions,
+                "hits": self.hits.value,
+                "misses": self.misses.value,
+                "recompiles": self.recompiles.value,
+                "evictions": self.evictions.value,
             }
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self._built.clear()
-            self.hits = self.misses = self.recompiles = self.evictions = 0
+            for c in (self.hits, self.misses, self.recompiles, self.evictions):
+                c.inc(-c.value)
 
     def partition(self, tag: Hashable) -> "CachePartition":
         """A namespaced view of this cache: every key is transparently
@@ -330,13 +342,21 @@ def compile_fanout(
                     f"compile round exceeded deadline of {deadline:.3g}s"
                 ))
                 continue
-            r = cache.get_or_build(k, b)
+            # span the build thunk, not the lookup: a cache hit never runs
+            # ``b``, so hits cost no span and the trace shows real compiles
+            r = cache.get_or_build(k, _tracer().wrap(b, "compile"))
             if fatal is not None and isinstance(r, BaseException) and fatal(r):
                 raise r
             results.append(r)
         return results
     pool = ThreadPoolExecutor(max_workers=min(jobs, len(items)))
-    futs = [pool.submit(cache.get_or_build, k, b) for k, b in items]
+    # wrap() captures *this* thread's current span, so worker-side compile
+    # spans attach to the round that submitted them (pool threads have no
+    # ambient span of their own); wrapping the build thunk rather than the
+    # lookup means cache hits cost no span and the trace shows real compiles
+    tr = _tracer()
+    futs = [pool.submit(cache.get_or_build, k, tr.wrap(b, "compile"))
+            for k, b in items]
     results = [None] * len(items)
     pending = {f: i for i, f in enumerate(futs)}
     try:

@@ -42,6 +42,9 @@ import threading
 import time
 from typing import Any, Callable, Dict, Hashable, Optional, Set
 
+from repro.obs import events as _events
+from repro.obs import metrics as _metrics
+
 __all__ = [
     "GuardTimeout",
     "SandboxCrash",
@@ -253,11 +256,13 @@ def guarded_call(
         except (KeyboardInterrupt, SystemExit):
             raise
         except GuardTimeout:
+            _metrics.counter("guard.timeouts").inc()
             raise
         except Exception as e:
             if attempt >= retries or not transient(e):
                 raise
             delay = deterministic_backoff(attempt, backoff, backoff_mult, jitter, label)
+            _metrics.counter("guard.retries").inc()
             if on_retry is not None:
                 on_retry(attempt, e, delay)
             if delay > 0:
@@ -332,6 +337,7 @@ class Quarantine:
         self.max_failures = int(max_failures)
         self._failures: Dict[Hashable, int] = {}
         self._quarantined: Set[Hashable] = set()
+        self.strikes = _metrics.Counter()  # lifetime note_failure calls
 
     def __contains__(self, key: Hashable) -> bool:
         return key in self._quarantined
@@ -341,7 +347,10 @@ class Quarantine:
         quarantined."""
         n = self._failures.get(key, 0) + 1
         self._failures[key] = n
+        self.strikes.inc()
         if n >= self.max_failures:
+            if key not in self._quarantined:
+                _metrics.counter("guard.quarantined").inc()
             self._quarantined.add(key)
         return key in self._quarantined
 
@@ -353,6 +362,19 @@ class Quarantine:
         return {
             "quarantined": len(self._quarantined),
             "failing": len(self._failures),
+            "max_failures": self.max_failures,
+        }
+
+    def snapshot(self) -> dict:
+        """The live view between summary dumps: lifetime strike count plus
+        the *current* states — which keys are out, which are accumulating
+        failures (and how many strikes each has).  Cheap (no measurement,
+        no lock): safe to poll from serving threads and ``repro.tune
+        report``."""
+        return {
+            "strikes": self.strikes.value,
+            "quarantined": sorted(map(str, self._quarantined)),
+            "failing": {str(k): n for k, n in self._failures.items()},
             "max_failures": self.max_failures,
         }
 
@@ -385,9 +407,10 @@ class CircuitBreaker:
         self.state = self.CLOSED
         self._consecutive_failures = 0
         self._cooldown_ticks = 0
-        self.opens = 0  # times the breaker tripped (incl. re-opens from probes)
-        self.denied = 0  # allow() calls answered False
-        self.probes = 0  # allow() calls granted while half-open
+        # counted on the obs metric primitive; stats()/snapshot() read them
+        self.opens = _metrics.Counter()  # trips (incl. re-opens from probes)
+        self.denied = _metrics.Counter()  # allow() calls answered False
+        self.probes = _metrics.Counter()  # allow() calls granted half-open
 
     def allow(self) -> bool:
         """May this call explore?  Ticks the cooldown while open."""
@@ -396,17 +419,17 @@ class CircuitBreaker:
         if self.state == self.OPEN:
             self._cooldown_ticks += 1
             if self._cooldown_ticks < self.cooldown:
-                self.denied += 1
+                self.denied.inc()
                 return False
-            self.state = self.HALF_OPEN
+            self._transition(self.HALF_OPEN)
         # half-open: grant the probe; the recorded outcome decides the state
-        self.probes += 1
+        self.probes.inc()
         return True
 
     def record_success(self) -> None:
         self._consecutive_failures = 0
         if self.state != self.CLOSED:
-            self.state = self.CLOSED
+            self._transition(self.CLOSED)
             self._cooldown_ticks = 0
 
     def record_failure(self) -> None:
@@ -418,15 +441,27 @@ class CircuitBreaker:
             self._trip()
 
     def _trip(self) -> None:
-        self.state = self.OPEN
-        self.opens += 1
+        self._transition(self.OPEN)
+        self.opens.inc()
         self._cooldown_ticks = 0
         self._consecutive_failures = 0
+
+    def _transition(self, to_state: str) -> None:
+        _metrics.counter("guard.breaker_transitions").inc()
+        _events.emit(
+            "breaker_transition", from_state=self.state, to_state=to_state
+        )
+        self.state = to_state
 
     def stats(self) -> dict:
         return {
             "state": self.state,
-            "opens": self.opens,
-            "denied": self.denied,
-            "probes": self.probes,
+            "opens": self.opens.value,
+            "denied": self.denied.value,
+            "probes": self.probes.value,
         }
+
+    def snapshot(self) -> dict:
+        """Alias of :meth:`stats` under the live-introspection name the
+        online tuner and quarantine share."""
+        return self.stats()

@@ -37,6 +37,9 @@ import os
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro.obs import metrics as _metrics
+from repro.obs.trace import tracer as _tracer
+
 __all__ = [
     "ENV_TUNE_MEASURE",
     "MeasurePolicy",
@@ -149,6 +152,10 @@ class MeasureResult:
     culled: bool = False
     pruned: Optional[str] = None
     times: list = dataclasses.field(default_factory=list)
+    # the racing CI at finalization time — what the cull decision actually
+    # compared (obs event stream: candidate_culled carries these)
+    ci_lo: float = 0.0
+    ci_hi: float = 0.0
 
     def meta(self) -> dict:
         """The bookkeeping the driver stores per measured point."""
@@ -220,7 +227,9 @@ class MeasureEngine:
         # transient failures retried in place
         self.guard = guard
         self.best_measured = math.inf  # incumbent for the roofline prefilter
-        self.stats = {
+        # every increment mirrors into the process metrics registry as
+        # measure.<key> — one bookkeeping site, two views
+        self.stats = _metrics.MirroredStats("measure", {
             "mode": self.policy.mode,
             "rounds": 0,
             "candidates": 0,
@@ -233,7 +242,7 @@ class MeasureEngine:
             "calibration_reps": 0,
             "timeouts": 0,
             "retried": 0,
-        }
+        })
 
     # ------------------------------------------------------------- internals
     def _rep(self, idx: int, fn: Callable[[], float], counter: str = "reps"):
@@ -272,6 +281,7 @@ class MeasureEngine:
                 self.on_error(idx, e)
             return e
         self.stats[counter] += 1
+        _metrics.histogram("measure.rep_seconds").observe(t)
         return t
 
     def _noise(self) -> NoiseEstimate:
@@ -325,6 +335,12 @@ class MeasureEngine:
         n = len(reps)
         self.stats["rounds"] += 1
         self.stats["candidates"] += n
+        with _tracer().span("measure", candidates=n):
+            return self._measure_round_inner(reps, bounds)
+
+    def _measure_round_inner(self, reps, bounds) -> List[MeasureResult]:
+        p = self.policy
+        n = len(reps)
         results: List[Optional[MeasureResult]] = [None] * n
         alive: List[int] = []
         for i, fn in enumerate(reps):
@@ -398,10 +414,11 @@ class MeasureEngine:
                 self.stats["failed"] += 1
                 return MeasureResult(cost=math.inf, times=times)
             times.append(t)
-        med, std, _, _ = summarize(times, self._noise())
+        med, std, lo, hi = summarize(times, self._noise())
         self.stats["measured"] += 1
         return MeasureResult(
-            cost=med, cost_std=std, repeats_spent=len(times), times=times
+            cost=med, cost_std=std, repeats_spent=len(times), times=times,
+            ci_lo=lo, ci_hi=hi,
         )
 
     def _race(
@@ -424,13 +441,15 @@ class MeasureEngine:
             alive.remove(i)
 
         def finalize(i: int, culled: bool) -> None:
-            med, std, _, _ = summarize(times[i], noise)
+            med, std, lo, hi = summarize(times[i], noise)
             results[i] = MeasureResult(
                 cost=med,
                 cost_std=std,
                 repeats_spent=len(times[i]),
                 culled=culled,
                 times=list(times[i]),
+                ci_lo=lo,
+                ci_hi=hi,
             )
             self.stats["measured"] += 1
             if culled:

@@ -44,6 +44,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+
 from .csa import CSA
 from .grid_random import GridSearch, RandomSearch
 from .measure import NoiseEstimate
@@ -333,6 +335,7 @@ class Pipeline(NumericalOptimizer):
     def _advance(self) -> None:
         """Move to the next stage, warm-seeding it at the incumbent."""
         self._si += 1
+        _metrics.counter("strategy.stage_transitions").inc()
         if self._si >= len(self._stages):
             return
         self._entry_spent = self._spent

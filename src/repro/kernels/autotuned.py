@@ -24,7 +24,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
-import sys
 from typing import Callable, Optional
 
 import numpy as np
@@ -50,9 +49,14 @@ from repro.core import (
 )
 from repro.core.guard import TRANSIENT_MARKERS as _TRANSIENT_MARKERS
 from repro.core.measure import ENV_TUNE_MEASURE  # noqa: F401 - public re-export
+from repro.obs import events as _events
+from repro.obs.log import get_logger
+from repro.obs.trace import tracer as _tracer
 from repro.tuning import TuningDB, default_db, make_key
 
 from . import ops
+
+log = get_logger(__name__)
 
 __all__ = [
     "autotuned",
@@ -447,28 +451,69 @@ def tune_call(
         if isinstance(exc, (KeyboardInterrupt, SystemExit)):
             raise exc  # user interrupt, not a candidate failure
         if quarantine is not None and quarantine.note_failure(qkey(knobs)):
-            if verbose:
-                print(
-                    f"[patsma] {name}: candidate {knobs} quarantined after "
-                    f"{quarantine.max_failures} failures"
-                )
+            log.info(
+                "%s: candidate %s quarantined after %d failures",
+                name, knobs, quarantine.max_failures,
+            )
         kind = classify_failure(exc)
         if kind == "unexpected":
             sig = (type(exc).__name__, str(exc).splitlines()[0] if str(exc) else "")
             if sig not in logged:
                 logged.add(sig)
-                print(
-                    f"[patsma] {name}: unexpected {stage} error for {knobs}: "
-                    f"{type(exc).__name__}: {exc}",
-                    file=sys.stderr,
+                log.warning(
+                    "%s: unexpected %s error for %s: %s: %s",
+                    name, stage, knobs, type(exc).__name__, exc,
                 )
         elif verbose:
-            print(f"[patsma] {name}: illegal candidate {knobs}: {exc}")
+            log.info("%s: illegal candidate %s: %s", name, knobs, exc)
 
     # fixed-path counters (the adaptive engine keeps its own): measure_stats
     # must report repetitions spent in either mode
     fixed_counts = {"rounds": 0, "candidates": 0, "measured": 0, "failed": 0,
                     "reps": 0, "warmup_reps": 0, "timeouts": 0, "retried": 0}
+
+    # obs forensics: every candidate a round asks for gets exactly one
+    # terminal event — this is the completeness invariant the acceptance
+    # gate checks (committed + culled + pruned + skipped + quarantined =
+    # asked).  Emission lives here, after measurement, because only this
+    # frame sees both the quarantine decision and the final MeasureResult.
+    ev_round = [0]
+
+    def emit_round_events(points, live, results) -> None:
+        if _events.sink() is None:
+            return
+        ev_round[0] += 1
+        sname = at.ctx_name()
+        rnd = ev_round[0]
+        live_set = set(live)
+        for i, p in enumerate(points):
+            _events.emit("candidate_asked", name=sname, point=dict(p), round=rnd)
+            if i not in live_set:
+                _events.emit("candidate_quarantined", name=sname, point=dict(p))
+                continue
+            r = results[i]
+            if isinstance(r, MeasureResult):
+                if r.pruned is not None:
+                    _events.emit("candidate_pruned", name=sname, point=dict(p),
+                                 bound=float(r.cost))
+                elif r.culled:
+                    _events.emit("candidate_culled", name=sname, point=dict(p),
+                                 cost=float(r.cost), ci_lo=float(r.ci_lo),
+                                 ci_hi=float(r.ci_hi))
+                elif math.isfinite(r.cost):
+                    _events.emit("candidate_committed", name=sname,
+                                 point=dict(p), cost=float(r.cost))
+                else:
+                    _events.emit("candidate_skipped", name=sname,
+                                 point=dict(p), reason="failed")
+            else:
+                c = float(r)
+                if math.isfinite(c):
+                    _events.emit("candidate_committed", name=sname,
+                                 point=dict(p), cost=c)
+                else:
+                    _events.emit("candidate_skipped", name=sname,
+                                 point=dict(p), reason="failed")
 
     def measure_one(p, ex):
         if isinstance(ex, BaseException):
@@ -552,15 +597,21 @@ def tune_call(
             )
             for i, ex in zip(live, compiled):
                 results[i] = measure_one(points[i], ex)
+            emit_round_events(points, live, results)
             return results
         from concurrent.futures import ThreadPoolExecutor, wait
 
         with ThreadPoolExecutor(max_workers=min(jobs, len(items))) as pool:
-            futs = [pool.submit(_EXEC_CACHE.get_or_build, k, b) for k, b in items]
+            # wrap the build thunk, not the lookup: cache hits cost no span
+            tr = _tracer()
+            futs = [pool.submit(_EXEC_CACHE.get_or_build, k,
+                                tr.wrap(b, "compile"))
+                    for k, b in items]
             if drain:  # no compile runs in the background of any measurement
                 wait(futs)
             for i, f in zip(live, futs):
                 results[i] = measure_one(points[i], f.result())
+        emit_round_events(points, live, results)
         return results
 
     # --- adaptive policy: racing engine over each compiled round
@@ -630,7 +681,9 @@ def tune_call(
                 reps.append(make_rep(p, ex))
                 bounds.append(analytic(p, ex) if want_bounds else None)
         engine.on_error = lambda i, e: note_failure(points[i], e, "measure")
-        return engine.measure_round(reps, bounds=bounds)
+        results = engine.measure_round(reps, bounds=bounds)
+        emit_round_events(points, live, results)
+        return results
 
     measure_batch = (
         measure_batch_adaptive if policy.mode == "adaptive" else measure_batch_fixed

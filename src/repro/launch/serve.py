@@ -68,7 +68,26 @@ def main():
                          "merged (keep-better) into the first at startup")
     ap.add_argument("--epsilon", type=float, default=0.25,
                     help="explored fraction of decode chunks while tuning")
+    ap.add_argument("--obs-dir", type=str, default=None,
+                    help="write observability artifacts (events.jsonl, "
+                         "trace.json, metrics.json) into this directory "
+                         "(default: the REPRO_OBS env var, else off)")
     args = ap.parse_args()
+
+    from repro import obs
+
+    if args.obs_dir:
+        obs.configure(args.obs_dir)
+    else:
+        obs.configure_from_env()
+    try:
+        with obs.span("serve", gen=args.gen):
+            _serve(args)
+    finally:
+        obs.shutdown()
+
+
+def _serve(args):
 
     cfg = configs.get_tiny(args.arch) if args.tiny else configs.get(args.arch)
     model = Model(cfg, ExecConfig(rec_chunk=4))

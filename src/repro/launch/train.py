@@ -37,10 +37,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", action="store_true",
                     help="initialize jax.distributed from env (multi-host)")
+    ap.add_argument("--obs-dir", type=str, default=None,
+                    help="write observability artifacts (events.jsonl, "
+                         "trace.json, metrics.json) into this directory "
+                         "(default: the REPRO_OBS env var, else off)")
     args = ap.parse_args()
 
     if args.distributed:
         jax.distributed.initialize()
+
+    from repro import obs
+
+    if args.obs_dir:
+        obs.configure(args.obs_dir)
+    else:
+        obs.configure_from_env()
 
     from repro.runtime import TrainJob
 
@@ -59,7 +70,11 @@ def main():
         runtime=args.runtime,
         tune_epsilon=args.epsilon,
     )
-    hist = job.run()
+    try:
+        with obs.span("train", steps=args.steps):
+            hist = job.run()
+    finally:
+        obs.shutdown()
     print(json.dumps({
         "final_loss": hist["loss"][-1],
         "steps": len(hist["loss"]),

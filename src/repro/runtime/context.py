@@ -37,6 +37,7 @@ from typing import Any, Callable, Mapping, Optional
 
 from repro.core import Autotuning, ExecutableCache
 from repro.core.optimizer import NumericalOptimizer
+from repro.obs import metrics as _metrics
 
 from .drift import DriftDetector
 from .online import Decision, OnlineTuner
@@ -260,6 +261,7 @@ class ContextRouter:
                 breaker=dict(spec.breaker) if spec.breaker is not None else None,
             )
             self._tuners[enc] = t
+            _metrics.gauge("router.contexts").set(len(self._tuners))
         if sig is not None:
             if len(self._fast) >= self._fast_max:
                 self._fast.clear()
@@ -343,3 +345,8 @@ class ContextRouter:
                 total[k] += t.stats_[k]
         total["cache"] = self.cache.stats()
         return total
+
+    def snapshot(self) -> dict:
+        """Cheap per-context health: each tuner's :meth:`OnlineTuner.snapshot`
+        keyed by the encoded context (no cache walk, no drift stats)."""
+        return {enc: t.snapshot() for enc, t in self._tuners.items()}

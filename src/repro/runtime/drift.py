@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import math
 from collections import deque
+
+from repro.obs import metrics as _metrics
 from typing import Optional
 
 __all__ = ["DriftDetector"]
@@ -131,6 +133,7 @@ class DriftDetector:
         elif recent > self.factor * base + self.atol:
             level = 1
         if level:
+            _metrics.counter("drift.events").inc()
             # report the freshest min_samples' median: the rolling window that
             # *detects* drift still contains pre-drift samples, but consumers
             # (the warm re-search noting the incumbent's live cost) want the

@@ -61,6 +61,8 @@ import numpy as np
 
 from repro.core import Autotuning, CircuitBreaker, ExecutableCache
 from repro.core.measure import NoiseEstimate, resolve_measure_policy, summarize
+from repro.obs import events as _events
+from repro.obs import metrics as _metrics
 
 from .drift import DriftDetector
 
@@ -183,7 +185,9 @@ class OnlineTuner:
         self._rep_times: list = []  # current explore candidate's observed reps
         self._rep_key = None  # space.key of the candidate being repped
         self.events: list = []  # drift resets, with context
-        self.stats_ = {
+        # mirrored: every numeric increment lands in the process metrics
+        # registry as online.<key> (ε-credit spend = online.explores)
+        self.stats_ = _metrics.MirroredStats("online", {
             "calls": 0,
             "explores": 0,  # explore *requests* (= repetitions spent)
             "exploits": 0,
@@ -196,7 +200,7 @@ class OnlineTuner:
             "breaker_denied": 0,  # calls whose exploration the breaker blocked
             "drift_resets": 0,
             "searches_completed": 0,
-        }
+        })
 
     # ------------------------------------------------------------ properties
     @property
@@ -213,6 +217,23 @@ class OnlineTuner:
         if at.finished or np.isfinite(at.best_cost):
             return at.best_point
         return dict(self._default) if self._default is not None else at.best_point
+
+    def snapshot(self) -> dict:
+        """Cheap point-in-time view (no cache walk, no drift window math):
+        the serving counters plus the breaker's gate state — what a
+        dashboard or ``repro.tune report`` polls between summary dumps."""
+        out = {
+            "name": self.name,
+            "calls": self.stats_["calls"],
+            "explores": self.stats_["explores"],
+            "exploits": self.stats_["exploits"],
+            "breaker_denied": self.stats_["breaker_denied"],
+            "drift_resets": self.stats_["drift_resets"],
+            "finished": self.at.finished,
+        }
+        if self.breaker is not None:
+            out["breaker"] = self.breaker.snapshot()
+        return out
 
     def stats(self) -> dict:
         out = dict(self.stats_)
@@ -546,6 +567,8 @@ class OnlineTuner:
         self._rep_times = []  # pre-reset reps describe the old environment
         self._rep_key = None
         self.stats_["drift_resets"] += 1
+        _events.emit("drift_reset", name=self.name, level=int(level),
+                     point=dict(incumbent), recent_cost=fresh)
         self.events.append(
             {"seq": self._seq, "level": int(level), "point": dict(incumbent),
              "recent_cost": fresh,

@@ -24,6 +24,11 @@ One front door for every offline tuning workflow::
   shard.
 * ``db diff`` — compare two DBs' best points; exit 1 on any mismatch (the
   CI shard-equivalence gate).
+* ``report`` — render the observability artifacts a ``pretune --obs-dir``
+  run wrote (:mod:`repro.obs.report`): search timeline, per-phase time
+  breakdown, candidate accounting, metrics, fleet shard health.  Exit 1
+  when the event stream fails schema validation or the candidate
+  accounting does not balance.
 """
 from __future__ import annotations
 
@@ -40,6 +45,7 @@ commands:
   db merge           fold shard DBs into one (keep-better conflict resolution)
   db list            show a DB's records (--grid: the pretune grid + hit status)
   db diff            compare two DBs' best points; exit 1 on mismatch
+  report             render search forensics from an --obs-dir directory
 """
 
 
@@ -200,6 +206,43 @@ def _db_diff(argv) -> int:
     return 0
 
 
+# -------------------------------------------------------------------- report
+def _report(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.tune report",
+        description="render search forensics from an --obs-dir directory",
+    )
+    ap.add_argument("obs_dir", metavar="OBS_DIR",
+                    help="directory a run wrote via --obs-dir / REPRO_OBS")
+    ap.add_argument("--db", default=None,
+                    help="tuning DB whose run journal to include as shard health")
+    ap.add_argument(
+        "--journal", action="append", default=None, metavar="PATH",
+        help="run journal(s) to include as fleet shard health; repeatable",
+    )
+    ap.add_argument(
+        "--stale", type=float, default=300.0, metavar="SECONDS",
+        help="age of the last journal event past which an interrupted shard "
+             "counts as STALLED rather than live (default: 300)",
+    )
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.obs_dir):
+        print(f"report: no obs directory at {args.obs_dir}", file=sys.stderr)
+        return 2
+
+    from repro.obs.report import render_report
+
+    text, code = render_report(
+        args.obs_dir,
+        db_path=args.db,
+        journals=args.journal or (),
+        stale_s=args.stale,
+    )
+    print(text, end="")
+    return code
+
+
 def _db(argv) -> int:
     if not argv or argv[0] in ("-h", "--help"):
         print("usage: python -m repro.tune db {merge,list,diff} ...")
@@ -232,6 +275,8 @@ def main(argv=None) -> int:
         return pretune_main(rest, prog="repro.tune pretune")
     if cmd == "db":
         return _db(rest)
+    if cmd == "report":
+        return _report(rest)
     print(f"repro.tune: unknown command {cmd!r}", file=sys.stderr)
     print(_USAGE, file=sys.stderr)
     return 2

@@ -31,12 +31,16 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 import tempfile
 import threading
+import time
 from typing import Optional, Tuple
 
+from repro.obs.log import get_logger
+
 from .records import SCHEMA_VERSION, TuningKey, TuningRecord
+
+log = get_logger(__name__)
 
 __all__ = ["TuningDB", "RunJournal", "default_db"]
 
@@ -83,10 +87,9 @@ class TuningDB:
             if not isinstance(blob, dict) or "records" not in blob:
                 raise ValueError("not a tuning DB")
             if int(blob.get("schema", -1)) > SCHEMA_VERSION:
-                print(
-                    f"[tuning] {self.path}: schema {blob.get('schema')} is newer than "
-                    f"supported ({SCHEMA_VERSION}); ignoring file",
-                    file=sys.stderr,
+                log.warning(
+                    "%s: schema %s is newer than supported (%s); ignoring file",
+                    self.path, blob.get("schema"), SCHEMA_VERSION,
                 )
                 return 0
             records = {}
@@ -102,9 +105,8 @@ class TuningDB:
                 note = f"moved to {backup}"
             except OSError:
                 note = "could not quarantine"
-            print(
-                f"[tuning] {self.path}: unreadable ({e!r}); {note}; starting empty",
-                file=sys.stderr,
+            log.warning(
+                "%s: unreadable (%r); %s; starting empty", self.path, e, note
             )
             with self._lock:
                 self._records = {}
@@ -249,6 +251,8 @@ class RunJournal:
         """Durably append one event (fsync before returning; on a fresh
         journal the containing directory is fsynced too so the file itself
         survives a crash)."""
+        event = dict(event)
+        event.setdefault("ts", time.time())  # shard liveness (obs report)
         line = json.dumps(event, sort_keys=True, default=repr)
         fresh = not os.path.exists(self.path)
         with open(self.path, "a", encoding="utf-8") as f:
@@ -292,10 +296,9 @@ class RunJournal:
                 try:
                     ev = json.loads(line)
                 except ValueError:
-                    print(
-                        f"[tuning] {self.path}: torn/garbled journal line "
-                        f"{i + 1}; keeping the {len(out)} events before it",
-                        file=sys.stderr,
+                    log.warning(
+                        "%s: torn/garbled journal line %d; keeping the %d "
+                        "events before it", self.path, i + 1, len(out)
                     )
                     break
                 if isinstance(ev, dict) and "event" in ev:
@@ -362,10 +365,9 @@ class RunJournal:
             try:
                 db.put(TuningRecord.from_json(rec_json), save=False)
             except Exception as e:
-                print(
-                    f"[tuning] {self.path}: unreadable committed record "
-                    f"({e!r}); skipping",
-                    file=sys.stderr,
+                log.warning(
+                    "%s: unreadable committed record (%r); skipping",
+                    self.path, e,
                 )
         return db
 

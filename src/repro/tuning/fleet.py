@@ -41,6 +41,8 @@ import json
 import math
 import time
 from concurrent.futures import ThreadPoolExecutor
+
+from repro.obs.trace import tracer as _tracer
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -416,8 +418,14 @@ class ShardedPortfolio:
                         allow[i] = a
                 if not allow:
                     break
+                # worker turns open member_turn spans attached to *this*
+                # thread's current span, so a fleet run nests under the
+                # caller's search/pretune span in the trace
                 futs = {
-                    pool.submit(self._turn, i, a, measure): i
+                    pool.submit(
+                        _tracer().wrap(self._turn, "member_turn", member=i),
+                        i, a, measure,
+                    ): i
                     for i, a in allow.items()
                 }
                 for f, i in futs.items():

@@ -296,6 +296,12 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
              "(required for exact shard-equivalence)",
     )
     ap.add_argument(
+        "--obs-dir", type=str, default=None, metavar="DIR",
+        help="write observability artifacts (events.jsonl, trace.json, "
+             "metrics.json) into DIR; 'python -m repro.tune report DIR' "
+             "renders them (default: the REPRO_OBS env var, else off)",
+    )
+    ap.add_argument(
         "--resume", action="store_true",
         help="resume a killed sweep from its run journal (<db>.journal): "
              "cases already committed or failed are skipped, only "
@@ -303,8 +309,14 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
     )
     args = ap.parse_args(argv)
 
+    from repro import obs
     from repro.kernels.autotuned import exec_cache, registered, tune_call
     from repro.tuning import TuningDB, default_device
+
+    if args.obs_dir:
+        obs.configure(args.obs_dir)
+    else:
+        obs.configure_from_env()
 
     max_iter = args.max_iter if args.max_iter is not None else (2 if args.smoke else 4)
     db = TuningDB(args.db)
@@ -374,70 +386,78 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
     # aggregate measurement-engine counters across the sweep (run summary)
     totals = {"reps": 0, "warmup_reps": 0, "calibration_reps": 0,
               "culled": 0, "pruned_roofline": 0, "measured": 0, "failed": 0}
-    for name, label, build in cases:
-        call_args = build()
-        key = _case_key(name, call_args, interpret=not args.no_interpret)
-        if key.encode() in done_keys:
-            n_skipped += 1
-            continue
-        t0 = time.perf_counter()
-        mstats: dict = {}
-        journal.start(key)
-        rec = tune_call(
-            name,
-            *call_args,
-            db=db,
-            interpret=not args.no_interpret,
-            num_opt=args.num_opt,
-            max_iter=max_iter,
-            seed=args.seed,
-            jobs=args.jobs,
-            source="pretune",
-            measure=args.measure,
-            measure_stats=mstats,
-            strategy=args.strategy,
-            cost_fn=cost_fn,
-            warm_start=not args.no_warm_start,
-        )
-        dt = time.perf_counter() - t0
-        for k in totals:
-            totals[k] += int(mstats.get(k, 0))
-        if rec is None:
-            journal.failed(key, "every candidate failed")
-            print(f"  {name}/{label}: every candidate failed; nothing stored ({dt:.1f}s)",
-                  file=sys.stderr)
-            continue
-        journal.commit(key, rec)
-        crashed = f" crashed={rec.crashed}" if rec.crashed else ""
-        strat = f" strategy={rec.strategy}" if rec.strategy and rec.strategy != "csa" else ""
-        raced = ""
-        if mstats.get("mode") == "adaptive" and mstats.get("measured"):
-            raced = (f" reps={mstats['reps']}"
-                     f" culled={mstats['culled']}"
-                     f" pruned={mstats['pruned_roofline']}")
+    # root span: every search/round/compile span of the sweep nests here,
+    # and shutdown() flushes trace.json + metrics.json even on a crash
+    sweep_span = obs.span("pretune", cases=len(cases))
+    sweep_span.__enter__()
+    try:
+        for name, label, build in cases:
+            call_args = build()
+            key = _case_key(name, call_args, interpret=not args.no_interpret)
+            if key.encode() in done_keys:
+                n_skipped += 1
+                continue
+            t0 = time.perf_counter()
+            mstats: dict = {}
+            journal.start(key)
+            rec = tune_call(
+                name,
+                *call_args,
+                db=db,
+                interpret=not args.no_interpret,
+                num_opt=args.num_opt,
+                max_iter=max_iter,
+                seed=args.seed,
+                jobs=args.jobs,
+                source="pretune",
+                measure=args.measure,
+                measure_stats=mstats,
+                strategy=args.strategy,
+                cost_fn=cost_fn,
+                warm_start=not args.no_warm_start,
+            )
+            dt = time.perf_counter() - t0
+            for k in totals:
+                totals[k] += int(mstats.get(k, 0))
+            if rec is None:
+                journal.failed(key, "every candidate failed")
+                print(f"  {name}/{label}: every candidate failed; nothing stored ({dt:.1f}s)",
+                      file=sys.stderr)
+                continue
+            journal.commit(key, rec)
+            crashed = f" crashed={rec.crashed}" if rec.crashed else ""
+            strat = f" strategy={rec.strategy}" if rec.strategy and rec.strategy != "csa" else ""
+            raced = ""
+            if mstats.get("mode") == "adaptive" and mstats.get("measured"):
+                raced = (f" reps={mstats['reps']}"
+                         f" culled={mstats['culled']}"
+                         f" pruned={mstats['pruned_roofline']}")
+            print(
+                f"  {name}/{label}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
+                f"evals={rec.evals}{crashed}{strat}{raced} ({dt:.1f}s)"
+            )
+            n_done += 1
+        db.save()
+        cs = exec_cache().stats()
+        skipped = f", {n_skipped} resumed-as-done" if n_skipped else ""
         print(
-            f"  {name}/{label}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
-            f"evals={rec.evals}{crashed}{strat}{raced} ({dt:.1f}s)"
+            f"pretune: {n_done} contexts tuned{skipped}, {len(db)} records in {args.db} "
+            f"({time.perf_counter() - t_all:.1f}s); exec cache: {cs['misses']} compiles, "
+            f"{cs['hits']} hits, {cs['recompiles']} recompiles"
         )
-        n_done += 1
-    db.save()
-    cs = exec_cache().stats()
-    skipped = f", {n_skipped} resumed-as-done" if n_skipped else ""
-    print(
-        f"pretune: {n_done} contexts tuned{skipped}, {len(db)} records in {args.db} "
-        f"({time.perf_counter() - t_all:.1f}s); exec cache: {cs['misses']} compiles, "
-        f"{cs['hits']} hits, {cs['recompiles']} recompiles"
-    )
-    if totals["measured"] or totals["reps"]:
-        print(
-            f"pretune: measurement: {totals['reps']} reps "
-            f"(+{totals['warmup_reps']} warmup, {totals['calibration_reps']} "
-            f"calibration) over {totals['measured']} candidates; "
-            f"{totals['culled']} culled by racing, "
-            f"{totals['pruned_roofline']} roofline-pruned, "
-            f"{totals['failed']} failed"
-        )
-    return 0
+        if totals["measured"] or totals["reps"]:
+            print(
+                f"pretune: measurement: {totals['reps']} reps "
+                f"(+{totals['warmup_reps']} warmup, {totals['calibration_reps']} "
+                f"calibration) over {totals['measured']} candidates; "
+                f"{totals['culled']} culled by racing, "
+                f"{totals['pruned_roofline']} roofline-pruned, "
+                f"{totals['failed']} failed"
+            )
+        return 0
+    finally:
+        sweep_span.__exit__(None, None, None)
+        obs.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,507 @@
+"""The observability layer: spans, metrics, events, snapshots, report.
+
+The load-bearing guarantees tested here:
+
+* span nesting survives thread pools (``compile_fanout`` workers and
+  ``ShardedPortfolio`` members attach to the submitting thread's span — no
+  orphan or crossed spans) and the export is valid Chrome-trace JSON;
+* the event stream accounts for **every** candidate of a ``tune_call`` run
+  exactly once (committed + culled + pruned + skipped + quarantined =
+  asked);
+* the sink shares the run journal's durability discipline (a torn trailing
+  line never poisons the readable prefix);
+* ``Quarantine``/``CircuitBreaker``/``OnlineTuner`` expose cheap
+  ``snapshot()`` views so denials and strikes are visible *between* summary
+  dumps;
+* ``repro.tune report`` renders the artifacts and exits nonzero on broken
+  accounting.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture
+def obs_dir(tmp_path):
+    """Obs enabled into a temp dir; global state restored afterwards."""
+    d = tmp_path / "obs"
+    obs.configure(str(d))
+    obs_metrics.registry().reset()
+    try:
+        yield str(d)
+    finally:
+        obs.shutdown()
+        obs_metrics.registry().reset()
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts and ends with observability disabled."""
+    obs.shutdown()
+    yield
+    obs.shutdown()
+
+
+# ------------------------------------------------------------------- tracing
+def test_span_nesting_and_chrome_export(tmp_path):
+    t = Tracer()
+    t.enable()
+    with t.span("search", ctx="k"):
+        with t.span("round", round=1):
+            with t.span("compile"):
+                pass
+            with t.span("measure", candidates=3):
+                pass
+    path = str(tmp_path / "trace.json")
+    n = t.export_chrome(path)
+    assert n == 4
+    blob = json.loads(open(path).read())
+    xs = [e for e in blob["traceEvents"] if e["ph"] == "X"]
+    by_name = {e["name"]: e for e in xs}
+    assert set(by_name) == {"search", "round", "compile", "measure"}
+    assert by_name["search"]["args"].get("parent_id") is None
+    assert by_name["round"]["args"]["parent_id"] == by_name["search"]["args"]["span_id"]
+    for leaf in ("compile", "measure"):
+        assert by_name[leaf]["args"]["parent_id"] == by_name["round"]["args"]["span_id"]
+    # every span's interval nests inside its parent's
+    spans = {e["args"]["span_id"]: e for e in xs}
+    for e in xs:
+        pid = e["args"].get("parent_id")
+        if pid is not None:
+            p = spans[pid]
+            assert p["ts"] <= e["ts"]
+            assert e["ts"] + e["dur"] <= p["ts"] + p["dur"] + 1  # µs rounding
+
+
+def test_wrap_attaches_pool_workers_to_submitting_span():
+    t = Tracer()
+    t.enable()
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        with t.span("round", round=1):
+            work = t.wrap(lambda i: i * i, "compile")
+            futs = [pool.submit(work, i) for i in range(8)]
+            assert [f.result() for f in futs] == [i * i for i in range(8)]
+    spans = t.finished()
+    round_span = next(s for s in spans if s.name == "round")
+    compiles = [s for s in spans if s.name == "compile"]
+    assert len(compiles) == 8
+    # no orphans, no crossed parents: every worker span hangs off the round
+    assert all(s.parent_id == round_span.span_id for s in compiles)
+
+
+def test_compile_fanout_pool_spans_nest_under_round():
+    from repro.core.costs import ExecutableCache, compile_fanout
+    from repro.obs.trace import tracer
+
+    t = tracer()
+    t.reset()
+    t.enable()
+    try:
+        cache = ExecutableCache()
+        items = [((i,), (lambda i=i: i * 10)) for i in range(6)]
+        with t.span("round", round=1):
+            out = compile_fanout(items, cache=cache, jobs=3)
+        assert out == [i * 10 for i in range(6)]
+        spans = t.finished()
+        round_span = next(s for s in spans if s.name == "round")
+        compiles = [s for s in spans if s.name == "compile"]
+        assert len(compiles) == 6
+        assert all(s.parent_id == round_span.span_id for s in compiles)
+        # worker spans ran on pool threads yet none leaked onto a stack
+        assert t.current() is None
+    finally:
+        t.disable()
+        t.reset()
+
+
+def test_sharded_portfolio_member_turns_attach_to_parent_span():
+    from repro.core.csa import CSA
+    from repro.obs.trace import tracer
+    from repro.tuning.fleet import ShardedPortfolio
+
+    t = tracer()
+    t.reset()
+    t.enable()
+    try:
+        fleet = ShardedPortfolio(
+            [CSA(2, num_opt=2, max_iter=3, seed=0),
+             CSA(2, num_opt=2, max_iter=3, seed=1)],
+            budget=24, rung=2,
+        )
+        with t.span("search", ctx="fleet"):
+            fleet.run(lambda i, pts: [float(np.sum(p * p)) for p in pts],
+                      max_workers=2)
+        spans = t.finished()
+        search = next(s for s in spans if s.name == "search")
+        turns = [s for s in spans if s.name == "member_turn"]
+        assert turns, "fleet run produced no member_turn spans"
+        assert all(s.parent_id == search.span_id for s in turns)
+        members = {s.args.get("member") for s in turns}
+        assert members == {0, 1}
+    finally:
+        t.disable()
+        t.reset()
+
+
+def test_disabled_tracer_is_null_and_threadsafe():
+    t = Tracer()
+    assert not t.enabled
+    s = t.span("anything")
+    with s:
+        assert t.current() is None
+    assert t.wrap(abs, "compile") is abs
+    assert t.finished() == []
+
+
+# ------------------------------------------------------------------- metrics
+def test_metrics_primitives_and_registry():
+    r = obs_metrics.MetricsRegistry()
+    c = r.counter("a.b")
+    c.inc()
+    c.inc(4)
+    assert r.counter("a.b") is c and c.value == 5
+    g = r.gauge("g")
+    g.set(7)
+    g.dec(2)
+    assert g.value == 5
+    h = r.histogram("h")
+    for x in (1e-5, 2e-3, 0.5, 2.0):
+        h.observe(x)
+    snap = r.snapshot()
+    assert snap["a.b"] == 5 and snap["g"] == 5
+    assert snap["h"]["count"] == 4
+    assert abs(snap["h"]["sum"] - (1e-5 + 2e-3 + 0.5 + 2.0)) < 1e-12
+    with pytest.raises(TypeError):
+        r.gauge("a.b")  # type clash must not silently shadow
+
+
+def test_mirrored_stats_mirror_growth_only():
+    obs_metrics.registry().reset()
+    s = obs_metrics.MirroredStats("t", {"n": 0, "mode": "x"})
+    s["n"] += 3
+    s["n"] += 2
+    s["mode"] = "adaptive"  # non-numeric: dict-only
+    s["n"] = 0  # reset: not mirrored (counters are monotonic)
+    assert obs_metrics.counter("t.n").value == 5
+    assert s["n"] == 0 and s["mode"] == "adaptive"
+    obs_metrics.registry().reset()
+
+
+def test_existing_stats_are_backed_by_metrics():
+    """The cache/breaker counters are the metric primitives themselves, not
+    parallel ints (the 're-implemented on top' contract)."""
+    from repro.core.costs import ExecutableCache
+    from repro.core.guard import CircuitBreaker
+
+    cache = ExecutableCache()
+    assert isinstance(cache.hits, obs_metrics.Counter)
+    cache.get_or_build("k", lambda: 1)
+    cache.get_or_build("k", lambda: 1)
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+    br = CircuitBreaker(threshold=1, cooldown=2)
+    assert isinstance(br.denied, obs_metrics.Counter)
+
+
+# -------------------------------------------------------------------- events
+def test_event_sink_fsync_roundtrip_and_torn_line(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    sink = obs_events.EventSink(path)
+    sink.emit("search_start", name="k")
+    sink.emit("candidate_asked", name="k", point={"t": 1}, round=1)
+    sink.emit("candidate_committed", name="k", point={"t": 1}, cost=0.5)
+    assert sink.emitted == 3
+    sink.close()  # non-milestone events may buffer until flush/close
+    with open(path, "a") as f:
+        f.write('{"type": "candidate_cul')  # the crash-torn trailing line
+    evs = obs_events.read_events(path)
+    assert [e["type"] for e in evs] == [
+        "search_start", "candidate_asked", "candidate_committed"]
+    assert obs_events.validate_events(evs) == []
+    acc = obs_events.completeness(evs)
+    assert acc["k"]["asked"] == 1 and acc["k"]["balanced"]
+
+
+def test_event_schema_rejects_missing_fields(tmp_path):
+    sink = obs_events.EventSink(str(tmp_path / "e.jsonl"))
+    with pytest.raises(ValueError, match="missing fields"):
+        sink.emit("candidate_committed", name="k")  # no point/cost
+    problems = obs_events.validate_events([{"type": "bogus", "ts": 0, "pid": 1}])
+    assert problems and "unknown type" in problems[0]
+    assert obs_events.validate_events(
+        [{"type": "bogus", "ts": 0, "pid": 1}], strict_types=False) == []
+
+
+def test_emit_is_noop_without_sink():
+    obs_events.set_sink(None)
+    obs_events.emit("candidate_committed", name="k")  # invalid, but no sink
+
+
+def test_completeness_flags_imbalance():
+    evs = [
+        {"type": "candidate_asked", "name": "k", "point": {}, "round": 1,
+         "ts": 0, "pid": 1},
+        {"type": "candidate_asked", "name": "k", "point": {}, "round": 1,
+         "ts": 0, "pid": 1},
+        {"type": "candidate_committed", "name": "k", "point": {}, "cost": 1.0,
+         "ts": 0, "pid": 1},
+    ]
+    acc = obs_events.completeness(evs)
+    assert acc["k"]["asked"] == 2 and acc["k"]["terminal"] == 1
+    assert not acc["k"]["balanced"]
+
+
+# ---------------------------------------------------------------- snapshots
+def test_quarantine_snapshot_exposes_strikes_between_dumps():
+    from repro.core.guard import Quarantine
+
+    q = Quarantine(max_failures=2)
+    q.note_failure("bad")
+    snap = q.snapshot()
+    assert snap["strikes"] == 1 and snap["quarantined"] == []
+    assert snap["failing"] == {"bad": 1}
+    q.note_failure("bad")
+    snap = q.snapshot()
+    assert snap["strikes"] == 2 and snap["quarantined"] == ["bad"]
+
+
+def test_breaker_and_online_tuner_snapshot():
+    from repro.core import Autotuning, CircuitBreaker
+    from repro.runtime.online import OnlineTuner
+
+    at = Autotuning(min=1, max=8, dim=1, num_opt=2, max_iter=4, seed=0)
+    br = CircuitBreaker(threshold=1, cooldown=3)
+    tuner = OnlineTuner(at, epsilon=1.0, breaker=br, name="snap-test")
+    br.record_failure()  # trips immediately at threshold=1
+    for _ in range(2):
+        d = tuner.begin()
+        tuner.observe(d, 1.0)
+    snap = tuner.snapshot()
+    assert snap["name"] == "snap-test"
+    assert snap["calls"] == 2
+    assert snap["breaker_denied"] >= 1  # visible without a stats() dump
+    assert snap["breaker"]["state"] == "open"
+    assert "cache" not in snap  # cheap: no cache walk in the snapshot
+
+
+def test_breaker_transitions_counted():
+    from repro.core.guard import CircuitBreaker
+
+    obs_metrics.registry().reset()
+    br = CircuitBreaker(threshold=1, cooldown=1)
+    br.record_failure()  # closed -> open
+    assert br.snapshot()["state"] == "open"
+    assert br.allow()  # cooldown elapsed: open -> half_open probe
+    br.record_success()  # half_open -> closed
+    assert obs_metrics.counter("guard.breaker_transitions").value >= 3
+    obs_metrics.registry().reset()
+
+
+# --------------------------------------------------- end-to-end (tune_call)
+@pytest.fixture
+def obs_probe_kernel():
+    import jax.numpy as jnp
+
+    from repro.core import LogIntDim, SearchSpace
+    from repro.kernels.autotuned import _REGISTRY, KernelSpec, register
+
+    def probe(x, *, t1, t2, interpret=False):
+        val = (jnp.log2(t1 / 16.0)) ** 2 + (jnp.log2(t2 / 64.0)) ** 2
+        return x.sum() * 0.0 + val + 0.5
+
+    name = "_obs_probe"
+    register(
+        KernelSpec(
+            name=name,
+            fn=probe,
+            space=lambda x: SearchSpace(
+                [LogIntDim("t1", 4, 64), LogIntDim("t2", 16, 256)]
+            ),
+            defaults=lambda x: {"t1": 16, "t2": 64},
+        )
+    )
+    yield name
+    _REGISTRY.pop(name, None)
+
+
+def _det_cost(ex, *args):
+    return float(np.asarray(ex(*args)))
+
+
+@pytest.mark.parametrize("measure", ["fixed", "adaptive"])
+def test_tune_call_event_stream_accounts_for_every_candidate(
+    obs_dir, obs_probe_kernel, measure
+):
+    import jax.numpy as jnp
+
+    from repro.kernels.autotuned import exec_cache, tune_call
+    from repro.tuning import TuningDB
+
+    exec_cache().clear()  # compile spans record real builds, not cache hits
+    x = jnp.ones((4, 4))
+    rec = tune_call(obs_probe_kernel, x, db=TuningDB(None), interpret=True,
+                    num_opt=3, max_iter=3, seed=0, jobs=2, cost_fn=_det_cost,
+                    measure=measure)
+    assert rec is not None
+    d = obs.shutdown()
+    evs = obs_events.read_events(os.path.join(d, "events.jsonl"))
+    assert obs_events.validate_events(evs) == []
+    types = [e["type"] for e in evs]
+    assert "search_start" in types and "search_end" in types
+    assert "db_commit" in types
+    acc = obs_events.completeness(evs)
+    assert len(acc) == 1
+    (a,) = acc.values()
+    assert a["asked"] >= 1
+    assert a["balanced"], f"candidate accounting imbalanced: {a}"
+    # spans made it out as loadable Chrome JSON with the full hierarchy
+    blob = json.loads(open(os.path.join(d, "trace.json")).read())
+    xs = [e for e in blob["traceEvents"] if e["ph"] == "X"]
+    names = {e["name"] for e in xs}
+    assert {"search", "round", "compile"} <= names
+    ids = {e["args"]["span_id"] for e in xs}
+    for e in xs:
+        pid = e["args"].get("parent_id")
+        assert pid is None or pid in ids  # no orphan spans
+
+
+def test_quarantined_candidates_appear_in_stream(obs_dir, obs_probe_kernel):
+    import jax.numpy as jnp
+
+    from repro.kernels.autotuned import tune_call
+    from repro.tuning import TuningDB
+
+    x = jnp.ones((4, 4))
+
+    def flaky_cost(ex, *args):
+        c = _det_cost(ex, *args)
+        if c > 1.5:  # every non-near-optimal candidate "crashes"
+            raise RuntimeError("block size misfit")
+        return c
+
+    from repro.core import FaultPolicy
+
+    rec = tune_call(obs_probe_kernel, x, db=TuningDB(None), interpret=True,
+                    num_opt=3, max_iter=4, seed=0, cost_fn=flaky_cost,
+                    measure="fixed",
+                    fault_policy=FaultPolicy(max_failures=1, retries=0))
+    d = obs.shutdown()
+    evs = obs_events.read_events(os.path.join(d, "events.jsonl"))
+    acc = obs_events.completeness(evs)
+    (a,) = acc.values()
+    assert a["balanced"], f"imbalanced with failures in play: {a}"
+    assert a["skipped"] + a["quarantined"] >= 1
+    assert rec is None or np.isfinite(rec.cost)
+
+
+# -------------------------------------------------------------------- report
+def test_report_renders_and_gates(obs_dir, obs_probe_kernel, capsys):
+    import time as _time
+
+    import jax.numpy as jnp
+
+    from repro.kernels.autotuned import tune_call
+    from repro.tune import main as tune_main
+    from repro.tuning import TuningDB
+
+    x = jnp.ones((4, 4))
+    t0 = _time.perf_counter()
+    tune_call(obs_probe_kernel, x, db=TuningDB(None), interpret=True,
+              num_opt=3, max_iter=3, seed=0, cost_fn=_det_cost,
+              measure="adaptive")
+    wall = _time.perf_counter() - t0
+    d = obs.shutdown()
+
+    assert tune_main(["report", d]) == 0
+    out = capsys.readouterr().out
+    assert "schema: ok" in out
+    assert "candidate accounting" in out and "IMBALANCED" not in out
+    assert "phase breakdown" in out
+
+    from repro.obs.report import load_trace_spans, phase_breakdown
+
+    br = phase_breakdown(load_trace_spans(os.path.join(d, "trace.json")))
+    # per-phase accounting reconstructs the run's wall clock (±5%, plus a
+    # small absolute floor for sub-second smoke runs)
+    assert br["total_s"] <= wall * 1.05 + 0.05
+    covered = sum(br["phases"].values()) + br["other_s"]
+    assert covered <= br["total_s"] + 1e-6
+
+    # a corrupted stream must fail the gate
+    with open(os.path.join(d, "events.jsonl"), "a") as f:
+        f.write(json.dumps({"type": "candidate_asked", "name": "ghost",
+                            "point": {}, "round": 1, "ts": 0.0, "pid": 1})
+                + "\n")
+    assert tune_main(["report", d]) == 1
+    capsys.readouterr()
+
+
+def test_report_missing_dir_is_usage_error(capsys):
+    from repro.tune import main as tune_main
+
+    assert tune_main(["report", "/nonexistent/obs-dir"]) == 2
+    capsys.readouterr()
+
+
+# ----------------------------------------------------------- configure/env
+def test_configure_from_env_and_idempotency(tmp_path, monkeypatch):
+    d = str(tmp_path / "envobs")
+    monkeypatch.setenv("REPRO_OBS", d)
+    assert obs.configure_from_env()
+    assert obs.enabled() and obs.obs_dir() == os.path.abspath(d)
+    assert obs.configure(d)  # same dir: no-op, still enabled
+    obs.emit("search_start", name="k")
+    out = obs.shutdown()
+    assert out == os.path.abspath(d)
+    assert not obs.enabled()
+    assert os.path.exists(os.path.join(out, "trace.json"))
+    assert os.path.exists(os.path.join(out, "metrics.json"))
+    assert len(obs.read_events(os.path.join(out, "events.jsonl"))) == 1
+
+
+def test_log_levels(monkeypatch, capsys):
+    from repro.obs.log import get_logger, set_level
+
+    log = get_logger("repro.test_obs")
+    set_level("quiet")
+    log.info("should not appear")
+    set_level("debug")
+    log.debug("dbg visible")
+    err = capsys.readouterr().err
+    assert "should not appear" not in err
+    assert "dbg visible" in err
+    set_level("info")
+
+
+def test_drift_reset_event_emitted(obs_dir):
+    from repro.core import Autotuning
+    from repro.runtime.drift import DriftDetector
+    from repro.runtime.online import OnlineTuner
+
+    at = Autotuning(min=1, max=8, dim=1, num_opt=2, max_iter=4, seed=0)
+    tuner = OnlineTuner(
+        at, epsilon=1.0, name="drift-test",
+        drift=DriftDetector(window=2, min_samples=1, factor=1.2),
+    )
+    tuner.drive(lambda p: float(p["p0"]))
+    assert at.finished
+    # baseline 2 cheap samples, then a 50x degradation fires the detector
+    for c in (1.0, 1.0, 50.0):
+        d = tuner.begin()
+        tuner.observe(d, c)
+    d = obs.shutdown()
+    evs = obs.read_events(os.path.join(d, "events.jsonl"))
+    drifts = [e for e in evs if e["type"] == "drift_reset"]
+    assert len(drifts) == 1
+    assert drifts[0]["name"] == "drift-test" and drifts[0]["level"] >= 1
+    assert tuner.stats_["drift_resets"] == 1
