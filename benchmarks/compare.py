@@ -28,10 +28,17 @@ def _is_machine_time(key: str) -> bool:
     return key.endswith("_s") or key.endswith("_secs") or key == "wall"
 
 
-def compare(baseline: dict, current: dict, tolerance: float) -> list:
-    """Return a list of diff entries; ``flagged`` entries exceed the gate."""
+def compare(baseline: dict, current: dict, tolerance: float, only=None) -> list:
+    """Return a list of diff entries; ``flagged`` entries exceed the gate.
+
+    ``only`` restricts the comparison to the named benches — the partial
+    lanes (``serve-replay``) diff a one-bench blob without every other
+    baseline row flagging as missing."""
     base_by = {r["bench"]: r for r in baseline.get("results", [])}
     cur_by = {r["bench"]: r for r in current.get("results", [])}
+    if only:
+        base_by = {b: r for b, r in base_by.items() if b in only}
+        cur_by = {b: r for b, r in cur_by.items() if b in only}
     diffs = []
     for bench, base in sorted(base_by.items()):
         cur = cur_by.get(bench)
@@ -74,6 +81,8 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="relative drift allowed on numeric metrics (default 0.5)")
     ap.add_argument("--out", default=None, help="write the diff JSON here")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to compare (default: all)")
     ap.add_argument("--strict", action="store_true",
                     help="promote the warn gate: exit 1 on any flagged drift")
     args = ap.parse_args(argv)
@@ -82,7 +91,8 @@ def main(argv=None) -> int:
         baseline = json.load(f)
     with open(args.current) as f:
         current = json.load(f)
-    diffs = compare(baseline, current, args.tolerance)
+    only = frozenset(args.only.split(",")) if args.only else None
+    diffs = compare(baseline, current, args.tolerance, only=only)
     flagged = [d for d in diffs if d.get("flagged")]
 
     if args.out:

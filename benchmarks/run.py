@@ -33,6 +33,7 @@ BENCHES = [
     "measurement_overhead",  # adaptive racing vs fixed repeats (deterministic)
     "fleet_sharding",  # fleet: ShardedPortfolio wall-clock vs serial Portfolio
     "online_adaptation",  # runtime: adaptation latency/regret on a workload shift
+    "traffic_replay",  # serving: multi-tenant dispatch/racing/objectives under threads
     "fault_recovery",  # resilience: search under injected faults; guard overhead
     "obs_overhead",  # observability: tuning throughput obs off vs on (gate 1.05)
     "step_autotune",  # §2.4: exec modes on a real train step
@@ -62,8 +63,12 @@ def _run_one(name: str, smoke: bool) -> dict:
                 k: v for k, v in out.items() if isinstance(v, (int, float, str, bool))
             }
         print(f"bench_{name}_wall,{entry['wall_s'] * 1e6:.0f},ok")
-    except Exception as e:
-        traceback.print_exc()
+    except (Exception, SystemExit) as e:
+        # SystemExit is how a bench's smoke() reports a failed acceptance
+        # gate — record it and keep sweeping so --out still captures every
+        # other bench (the driver re-raises a summary SystemExit at the end)
+        if not isinstance(e, SystemExit):
+            traceback.print_exc()
         entry.update(status="failed", wall_s=time.time() - t0, error=repr(e))
         print(f"bench_{name}_wall,{entry['wall_s'] * 1e6:.0f},FAILED:{e!r}")
     return entry

@@ -114,6 +114,7 @@ class Autotuning:
         key=None,
         warm_start: bool = True,
         db_source: str = "online",
+        objective: Optional[str] = None,
     ) -> None:
         if ignore < 0:
             raise ValueError("ignore must be >= 0")
@@ -153,6 +154,10 @@ class Autotuning:
         self.strategy = getattr(self.optimizer, "spec", None) or strategy_label(
             self.optimizer
         )
+        # the statistic the fed costs minimize ("median" | "p95" | "p99" |
+        # None = unknown/user cost) — pure provenance here, stamped on
+        # committed TuningRecords; the measurement layer computes it
+        self.objective = str(objective).strip().lower() if objective else None
         if self.optimizer.get_dimension() != d:
             raise ValueError(
                 f"optimizer dim {self.optimizer.get_dimension()} != space dim {d}"
@@ -500,6 +505,17 @@ class Autotuning:
             return False
         if not force:
             existing = self.db.get(self.key)
+            if (
+                existing is not None
+                and existing.objective is not None
+                and rec.objective is not None
+                and existing.objective != rec.objective
+            ):
+                # tuned for a different statistic: a p99 cost and a median
+                # cost are not comparable, so the clobber guard cannot
+                # arbitrate — the caller changed what they optimize and the
+                # fresh record wins
+                existing = None
             if (
                 existing is not None
                 and np.isfinite(existing.cost)

@@ -65,8 +65,11 @@ TPU_V5E = HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9)
 
 
 class RuntimeCost:
-    """Median wall time of ``fn(*args)`` over ``repeats`` runs (after
-    ``warmup`` discarded runs — the `ignore` idea at measurement level).
+    """Wall time of ``fn(*args)`` over ``repeats`` runs (after ``warmup``
+    discarded runs — the `ignore` idea at measurement level); the returned
+    statistic is the ``objective`` over those reps (median by default,
+    ``"p95"``/``"p99"`` for tail-latency tuning — see
+    :data:`repro.core.measure.OBJECTIVES`).
 
     The per-repeat raw times of the most recent call are kept on
     :attr:`last_times` (:attr:`last_std` is their sample standard deviation),
@@ -77,9 +80,15 @@ class RuntimeCost:
     must never be classified into a candidate failure cost by the layers
     above."""
 
-    def __init__(self, warmup: int = 1, repeats: int = 3) -> None:
+    def __init__(
+        self, warmup: int = 1, repeats: int = 3, objective: str = "median"
+    ) -> None:
+        from .measure import objective_quantile
+
         self.warmup = warmup
         self.repeats = repeats
+        objective_quantile(objective)  # raises on unknown names
+        self.objective = str(objective).strip().lower()
         self.last_times: list = []  # raw measured reps of the latest call
 
     def __call__(self, fn: Callable, *args, **kwargs) -> float:
@@ -103,6 +112,10 @@ class RuntimeCost:
             # cost — re-raise before any classifying handler can eat it
             raise
         self.last_times = list(times)
+        if self.objective not in ("median", "p50"):
+            from .measure import objective_value
+
+            return objective_value(times, self.objective)
         times.sort()
         return times[len(times) // 2]
 
@@ -149,18 +162,35 @@ class ExecutableCache:
     eviction — the acceptance gate for the batched tuner is that this stays
     at zero on the smoke grid; an uncached transient failure counts as a
     plain miss on retry, not a recompile).
+
+    Multi-tenant budgets (default off): ``max_entries`` caps live entries
+    below ``maxsize`` and ``max_bytes`` caps the summed ``size_of(result)``
+    of *completed* builds — both evict least-recently-used completed entries
+    (in-flight builds are never dropped mid-compile: racing waiters hold the
+    future).  Every eviction increments :attr:`evictions` and the process
+    registry counter ``cache.evictions``.
     """
 
     def __init__(
         self,
         maxsize: int = 1024,
         *,
+        max_entries: Optional[int] = None,
+        max_bytes: Optional[int] = None,
+        size_of: Optional[Callable[[Any], int]] = None,
         cache_failures: Optional[Callable[[BaseException], bool]] = None,
         guard: Optional[Callable[[Callable[[], Any]], Callable[[], Any]]] = None,
     ) -> None:
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.maxsize = int(maxsize)
+        self.max_entries = int(max_entries) if max_entries is not None else None
+        self.max_bytes = int(max_bytes) if max_bytes is not None else None
+        self._size_of = size_of
         self._cache_failures = cache_failures
         # optional resilience hook: wraps every owner build (e.g.
         # ``FaultPolicy.wrap`` adds a watchdog timeout + transient retries)
@@ -169,6 +199,8 @@ class ExecutableCache:
         self._lock = threading.Lock()
         self._entries: "OrderedDict[Hashable, Future]" = OrderedDict()
         self._built: set = set()  # keys ever built (recompile accounting)
+        self._sizes: dict = {}  # key -> size_of(result), completed builds only
+        self._bytes = 0
         # lookup accounting on the obs metric primitive (repro.obs.metrics):
         # stats() below is a snapshot of these counters, not a parallel copy
         self.hits = _metrics.Counter()
@@ -179,6 +211,35 @@ class ExecutableCache:
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
+
+    def _evict_one(self, key: Hashable) -> None:
+        # caller holds self._lock
+        del self._entries[key]
+        self._bytes -= self._sizes.pop(key, 0)
+        self.evictions.inc()
+        _metrics.counter("cache.evictions").inc()
+
+    def _enforce_caps(self) -> None:
+        # caller holds self._lock; in-flight builds (no recorded size — their
+        # future is unresolved) are skipped so waiters never lose their build
+        entry_cap = self.maxsize
+        if self.max_entries is not None:
+            entry_cap = min(entry_cap, self.max_entries)
+        while len(self._entries) > entry_cap:
+            victim = next(
+                (k for k in self._entries if k in self._sizes or
+                 self._entries[k].done()),
+                None,
+            )
+            if victim is None:
+                break
+            self._evict_one(victim)
+        if self.max_bytes is not None:
+            while self._bytes > self.max_bytes:
+                victim = next((k for k in self._entries if k in self._sizes), None)
+                if victim is None:
+                    break
+                self._evict_one(victim)
 
     def get_or_build(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the cached executable for ``key``, building it (once) on a
@@ -198,9 +259,7 @@ class ExecutableCache:
                     self.recompiles.inc()
                 self._built.add(key)
                 owner = True
-                while len(self._entries) > self.maxsize:
-                    self._entries.popitem(last=False)
-                    self.evictions.inc()
+                self._enforce_caps()
         if owner:
             t_build = time.perf_counter()
             try:
@@ -229,8 +288,40 @@ class ExecutableCache:
                 _metrics.histogram("compile.seconds").observe(
                     time.perf_counter() - t_build
                 )
+                if self.max_bytes is not None:
+                    size = self._measure_size(result)
+                    with self._lock:
+                        if self._entries.get(key) is fut:
+                            self._bytes += size - self._sizes.get(key, 0)
+                            self._sizes[key] = size
+                            self._enforce_caps()
             fut.set_result(result)
         return fut.result()
+
+    def _measure_size(self, result: Any) -> int:
+        """Byte size of one completed build for the ``max_bytes`` budget:
+        the caller's ``size_of`` when given, else the executable's own code
+        size where the artifact exposes one, else a ``sys.getsizeof``
+        floor."""
+        if self._size_of is not None:
+            try:
+                return max(0, int(self._size_of(result)))
+            except Exception:
+                return 0
+        try:
+            ma = result.memory_analysis()
+            for attr in ("generated_code_size_in_bytes", "serialized_size"):
+                v = getattr(ma, attr, None)
+                if v:
+                    return int(v)
+        except Exception:
+            pass
+        import sys
+
+        try:
+            return int(sys.getsizeof(result))
+        except Exception:
+            return 0
 
     def peek(self, key: Hashable, default: Any = None) -> Any:
         """Non-building, non-blocking lookup: the cached value (executable or
@@ -248,6 +339,7 @@ class ExecutableCache:
         with self._lock:
             return {
                 "size": len(self._entries),
+                "bytes": self._bytes,
                 "hits": self.hits.value,
                 "misses": self.misses.value,
                 "recompiles": self.recompiles.value,
@@ -258,6 +350,8 @@ class ExecutableCache:
         with self._lock:
             self._entries.clear()
             self._built.clear()
+            self._sizes.clear()
+            self._bytes = 0
             for c in (self.hits, self.misses, self.recompiles, self.evictions):
                 c.inc(-c.value)
 

@@ -42,6 +42,7 @@ from repro.obs.trace import tracer as _tracer
 
 __all__ = [
     "ENV_TUNE_MEASURE",
+    "OBJECTIVES",
     "MeasurePolicy",
     "MeasureResult",
     "NoiseEstimate",
@@ -49,11 +50,57 @@ __all__ = [
     "resolve_measure_policy",
     "time_rep",
     "summarize",
+    "quantile",
+    "objective_value",
+    "objective_quantile",
 ]
 
 #: env var: process-default measurement policy for tune_call/pretune
 #: ("adaptive" | "fixed"; unset → adaptive)
 ENV_TUNE_MEASURE = "REPRO_TUNE_MEASURE"
+
+#: tuning objectives: which statistic of a candidate's rep times the search
+#: minimizes.  ``median``/``p50`` are synonyms (the classic behaviour);
+#: ``p95``/``p99`` optimize tail latency — production serving cares about
+#: the slow requests, and a knob that wins the median can lose the tail.
+OBJECTIVES = ("median", "p50", "p95", "p99")
+
+_OBJECTIVE_Q = {"median": 0.5, "p50": 0.5, "p95": 0.95, "p99": 0.99}
+
+
+def objective_quantile(objective: str) -> float:
+    """The quantile (in [0, 1]) a named objective minimizes."""
+    try:
+        return _OBJECTIVE_Q[str(objective).strip().lower()]
+    except KeyError:
+        raise ValueError(
+            f"objective must be one of {OBJECTIVES}, got {objective!r}"
+        ) from None
+
+
+def quantile(times: Sequence[float], q: float) -> float:
+    """Deterministic linear-interpolated quantile of ``times``.
+
+    ``q=0.5`` reproduces :func:`summarize`'s median exactly (even-length
+    inputs average the two middle values), so the default objective is
+    bit-identical to the pre-objective behaviour."""
+    ts = sorted(float(t) for t in times)
+    n = len(ts)
+    if n == 0:
+        return math.inf
+    if n == 1:
+        return ts[0]
+    pos = min(max(q, 0.0), 1.0) * (n - 1)
+    i = int(math.floor(pos))
+    frac = pos - i
+    if frac <= 0.0 or i + 1 >= n:
+        return ts[i]
+    return ts[i] * (1.0 - frac) + ts[i + 1] * frac
+
+
+def objective_value(times: Sequence[float], objective: str = "median") -> float:
+    """The objective statistic of one candidate's rep times."""
+    return quantile(times, objective_quantile(objective))
 
 
 def time_rep(fn: Callable, *args, **kwargs) -> float:
@@ -98,10 +145,19 @@ class MeasurePolicy:
     abs_noise: float = 5e-7  # noise-floor prior, seconds
     roofline: bool = True
     prune_margin: float = 1.0  # prune iff bound > incumbent * prune_margin
+    # which statistic of a candidate's reps the search minimizes.  Racing
+    # CIs and cull decisions stay median-based (the robust statistic noise
+    # calibration is built around); the objective is applied when a
+    # candidate's cost is finalized, so "median" is bit-identical to the
+    # pre-objective engine.
+    objective: str = "median"
 
     def __post_init__(self) -> None:
         if self.mode not in ("fixed", "adaptive"):
             raise ValueError(f"mode must be 'fixed' or 'adaptive', got {self.mode!r}")
+        obj = str(self.objective).strip().lower()
+        objective_quantile(obj)  # raises on unknown names
+        object.__setattr__(self, "objective", obj)
         if self.warmup < 0 or self.repeats < 1:
             raise ValueError("warmup must be >= 0 and repeats >= 1")
         lad = tuple(int(x) for x in self.ladder)
@@ -111,27 +167,43 @@ class MeasurePolicy:
 
 
 def resolve_measure_policy(
-    measure=None, *, warmup: Optional[int] = None, repeats: Optional[int] = None
+    measure=None,
+    *,
+    warmup: Optional[int] = None,
+    repeats: Optional[int] = None,
+    objective: Optional[str] = None,
 ) -> MeasurePolicy:
     """Coerce a user-facing ``measure=`` value into a :class:`MeasurePolicy`.
 
     ``None`` reads ``REPRO_TUNE_MEASURE`` (default ``"adaptive"``); a string
-    names the mode; a policy object passes through untouched.  ``warmup`` /
-    ``repeats`` override the named-mode defaults (they are the classic
-    ``tune_call(warmup=, repeats=)`` knobs) but never an explicit policy."""
+    names the mode; a mapping supplies :class:`MeasurePolicy` fields (mode
+    defaulting from the env var — the declarative route-spec form, e.g.
+    ``measure={"objective": "p99"}``); a policy object passes through
+    untouched.  ``warmup`` / ``repeats`` / ``objective`` override the
+    named-mode defaults (they are the classic ``tune_call(warmup=,
+    repeats=)`` knobs plus the tail-latency objective) but never an
+    explicit policy or an explicit mapping field."""
     if isinstance(measure, MeasurePolicy):
         return measure
+    fields: dict = {}
+    if measure is not None and not isinstance(measure, str):
+        try:
+            fields = dict(measure)
+        except (TypeError, ValueError):
+            raise TypeError(
+                "measure must be None, 'fixed', 'adaptive', a field mapping, "
+                f"or MeasurePolicy; got {measure!r}"
+            ) from None
+        measure = fields.pop("mode", None)
     if measure is None:
         measure = os.environ.get(ENV_TUNE_MEASURE, "") or "adaptive"
-    if not isinstance(measure, str):
-        raise TypeError(
-            f"measure must be None, 'fixed', 'adaptive', or MeasurePolicy; got {measure!r}"
-        )
-    fields: dict = {"mode": measure.strip().lower()}
+    fields["mode"] = str(measure).strip().lower()
     if warmup is not None:
-        fields["warmup"] = int(warmup)
+        fields.setdefault("warmup", int(warmup))
     if repeats is not None:
-        fields["repeats"] = int(repeats)
+        fields.setdefault("repeats", int(repeats))
+    if objective is not None:
+        fields.setdefault("objective", objective)
     return MeasurePolicy(**fields)
 
 
@@ -290,6 +362,14 @@ class MeasureEngine:
             return NoiseEstimate(p.abs_noise, p.rel_noise, 0)
         return self.noise
 
+    def _objective_cost(self, times: Sequence[float], med: float) -> float:
+        """Finalized cost of one candidate: ``med`` for the median objective
+        (bit-identical to the classic engine), the objective quantile of the
+        reps otherwise."""
+        if objective_quantile(self.policy.objective) == 0.5:
+            return med
+        return objective_value(times, self.policy.objective)
+
     # ------------------------------------------------------------ calibration
     def calibrate(self, rep_fn: Callable[[], float], idx: int = -1) -> NoiseEstimate:
         """Estimate the timer noise floor by replaying one known-good
@@ -417,7 +497,8 @@ class MeasureEngine:
         med, std, lo, hi = summarize(times, self._noise())
         self.stats["measured"] += 1
         return MeasureResult(
-            cost=med, cost_std=std, repeats_spent=len(times), times=times,
+            cost=self._objective_cost(times, med), cost_std=std,
+            repeats_spent=len(times), times=times,
             ci_lo=lo, ci_hi=hi,
         )
 
@@ -443,7 +524,7 @@ class MeasureEngine:
         def finalize(i: int, culled: bool) -> None:
             med, std, lo, hi = summarize(times[i], noise)
             results[i] = MeasureResult(
-                cost=med,
+                cost=self._objective_cost(times[i], med),
                 cost_std=std,
                 repeats_spent=len(times[i]),
                 culled=culled,

@@ -314,6 +314,7 @@ def tune_call(
     bound_fn: Optional[Callable] = None,
     measure_stats: Optional[dict] = None,
     strategy: Optional[str] = None,
+    objective: Optional[str] = None,
     warm_start: bool = True,
     fault_policy: Optional[FaultPolicy] = None,
     fault_plan=None,
@@ -367,6 +368,13 @@ def tune_call(
     engine's calibrated noise floor for its statistically-separated-lead
     culls.  The spec is stamped on the committed record (``strategy``).
 
+    ``objective`` picks the statistic a candidate's repetitions reduce to
+    (``"median"`` default, ``"p95"``, ``"p99"`` — see
+    :data:`repro.core.measure.OBJECTIVES`).  Tail objectives tune for
+    worst-case latency: the search minimizes the chosen quantile of each
+    candidate's measured repetitions, and the committed record is stamped
+    with the objective so a p99 cost is never compared against a median one.
+
     ``warm_start=False`` disables the DB neighbor seeding, making each
     context's search independent of what else the DB holds — the fleet's
     shard-equivalence contract (a sharded sweep must reproduce the
@@ -393,8 +401,12 @@ def tune_call(
     key = make_key(name, args=args, kwargs=kwargs, space=space,
                    extra={"interpret": bool(interpret)})
     db = db if db is not None else default_db()
-    policy = resolve_measure_policy(measure, warmup=warmup, repeats=repeats)
-    cost = cost_fn if cost_fn is not None else RuntimeCost(warmup=warmup, repeats=repeats)
+    policy = resolve_measure_policy(
+        measure, warmup=warmup, repeats=repeats, objective=objective
+    )
+    cost = cost_fn if cost_fn is not None else RuntimeCost(
+        warmup=warmup, repeats=repeats, objective=policy.objective
+    )
     jobs = _resolve_jobs(jobs)
     if drain is None:
         drain = bool(int(os.environ.get(ENV_TUNE_DRAIN, "0") or 0))
@@ -701,6 +713,7 @@ def tune_call(
         key=key,
         warm_start=warm_start,
         db_source=source,
+        objective=policy.objective,
     )
     at.entire_exec_batch(measure_batch)
     at.commit()  # no-op if auto-committed / exact hit

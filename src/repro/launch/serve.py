@@ -68,6 +68,11 @@ def main():
                          "merged (keep-better) into the first at startup")
     ap.add_argument("--epsilon", type=float, default=0.25,
                     help="explored fraction of decode chunks while tuning")
+    ap.add_argument("--objective", choices=("median", "p95", "p99"),
+                    default="median",
+                    help="statistic the decode-k search minimizes (p95/p99 "
+                         "tune for tail latency; the drift detector watches "
+                         "the same quantile)")
     ap.add_argument("--obs-dir", type=str, default=None,
                     help="write observability artifacts (events.jsonl, "
                          "trace.json, metrics.json) into this directory "
@@ -173,6 +178,11 @@ def _serve(args):
         epsilon=args.epsilon,
         num_opt=3,
         max_iter=4,
+        # tail objectives need a multi-rep stream per candidate (the p99 of
+        # one rep is that rep); the median default keeps the classic
+        # one-explore-one-measurement serving loop
+        measure=None if args.objective == "median"
+        else {"mode": "fixed", "repeats": 8, "objective": args.objective},
         drift={"window": 8, "min_samples": 4, "factor": 1.5},
         extra=extra,
     )

@@ -23,6 +23,13 @@ single attribute check while disabled.
     ... tune ...
     obs.shutdown()                      # writes trace.json + metrics.json
                                         # (events.jsonl streamed all along)
+
+Serving at scale: ``REPRO_OBS_SAMPLE=0.01`` (or ``configure(...,
+sample=0.01)``) decimates the high-rate per-request artifacts — serving
+``request`` spans and ``explore_rep`` events — to 1-in-N with a
+deterministic counter stride.  Structural spans and accounting events are
+never sampled; the sink reports what it dropped in a close-time
+``sampling_summary`` so :func:`completeness` still balances.
 """
 from __future__ import annotations
 
@@ -63,6 +70,9 @@ __all__ = [
 
 _OBS_DIR: Optional[str] = None
 
+#: env var: sample rate in (0, 1] for per-request spans + events
+ENV_OBS_SAMPLE = "REPRO_OBS_SAMPLE"
+
 TRACE_FILE = "trace.json"
 EVENTS_FILE = "events.jsonl"
 METRICS_FILE = "metrics.json"
@@ -77,19 +87,32 @@ def obs_dir() -> Optional[str]:
     return _OBS_DIR
 
 
-def configure(directory: Optional[str]) -> bool:
+def configure(directory: Optional[str], *, sample: Optional[float] = None) -> bool:
     """Enable tracing + events into ``directory`` (created if missing).
 
     ``None`` / empty disables (and flushes what was buffered).  Returns
     whether observability is enabled afterwards.  Idempotent for the same
-    directory; a new directory re-points the sink and resets the tracer."""
+    directory; a new directory re-points the sink and resets the tracer.
+    ``sample`` (default: the ``REPRO_OBS_SAMPLE`` env var, else keep
+    everything) decimates per-request spans/events to roughly that
+    fraction."""
     global _OBS_DIR
     if not directory:
         if _OBS_DIR is not None:
             shutdown()
         return False
     directory = os.path.abspath(directory)
+    if sample is None:
+        raw = os.environ.get(ENV_OBS_SAMPLE)
+        if raw:
+            sample = float(raw)
     if _OBS_DIR == directory:
+        if sample is not None:
+            t = tracer()
+            t.set_sample_rate(sample)
+            s = events.sink()
+            if s is not None:
+                s.set_sample_rate(sample)
         return True
     if _OBS_DIR is not None:
         shutdown()
@@ -98,13 +121,18 @@ def configure(directory: Optional[str]) -> bool:
     t = tracer()
     t.reset()
     t.enable()
-    events.set_sink(EventSink(os.path.join(directory, EVENTS_FILE)))
+    sink = EventSink(os.path.join(directory, EVENTS_FILE))
+    if sample is not None:
+        t.set_sample_rate(sample)
+        sink.set_sample_rate(sample)
+    events.set_sink(sink)
     return True
 
 
 def configure_from_env() -> bool:
     """Opt in via ``REPRO_OBS=<dir>`` (how ``serve``/``train``/``pretune``
-    pick it up without a flag)."""
+    pick it up without a flag); ``REPRO_OBS_SAMPLE`` tunes request-level
+    sampling."""
     return configure(os.environ.get("REPRO_OBS") or None)
 
 

@@ -41,12 +41,23 @@ stamps ``ts`` (unix seconds), ``type`` and ``pid`` on every event):
 ``db_commit``              the keep-better commit that actually stored
 ``drift_reset``            a drift detector triggered a re-search
 ``breaker_transition``     circuit breaker state change
+``explore_rep``            one online explore repetition landed (high-rate)
+``sampling_summary``       emitted at close: how many events sampling dropped
 =========================  ====================================================
 
 The invariant the acceptance gate (and ``tests/test_obs.py``) checks: within
 one search, every ``candidate_asked`` is answered by **exactly one** terminal
 event — committed + culled + pruned + skipped + quarantined = asked
 (:func:`completeness`).
+
+High-rate per-request forensics (:data:`SAMPLED_EVENTS` — currently
+``explore_rep``) can be decimated with :meth:`EventSink.set_sample_rate`
+(the ``REPRO_OBS_SAMPLE`` env var): a deterministic 1-in-N counter stride
+keeps replays reproducible, dropped events are tallied per context, and
+``close()`` emits one ``sampling_summary`` event carrying the tallies —
+:func:`completeness` surfaces them as ``sampled_out`` per name, so the
+account of what happened still balances under sampling.  Accounting events
+(``candidate_asked`` / terminals) are never sampled.
 """
 from __future__ import annotations
 
@@ -61,6 +72,7 @@ __all__ = [
     "EVENT_SCHEMA",
     "TERMINAL_EVENTS",
     "DURABLE_EVENTS",
+    "SAMPLED_EVENTS",
     "EventSink",
     "read_events",
     "validate_events",
@@ -80,6 +92,8 @@ EVENT_SCHEMA: Dict[str, frozenset] = {
     "db_commit": frozenset({"name", "point", "cost"}),
     "drift_reset": frozenset({"name", "level"}),
     "breaker_transition": frozenset({"from_state", "to_state"}),
+    "explore_rep": frozenset({"name", "point", "cost"}),
+    "sampling_summary": frozenset({"sampled_out"}),
 }
 
 TERMINAL_EVENTS = frozenset({
@@ -88,6 +102,13 @@ TERMINAL_EVENTS = frozenset({
     "candidate_pruned",
     "candidate_skipped",
     "candidate_quarantined",
+})
+
+#: high-rate per-request forensic events subject to sink-side sampling.
+#: Never includes accounting events: ``candidate_asked``/terminals must stay
+#: exact for the :func:`completeness` identity.
+SAMPLED_EVENTS = frozenset({
+    "explore_rep",
 })
 
 #: milestones after which durable state changed (a commit landed, a search
@@ -164,8 +185,25 @@ class EventSink:
         self._f = None
         self._last_sync = 0.0
         self.emitted = 0
+        # deterministic 1-in-N sampling of SAMPLED_EVENTS (no RNG: replayed
+        # workloads drop the same events); dropped events are tallied per
+        # context name and reported once via a close-time sampling_summary
+        self._sample_stride = 1
+        self._sample_n = 0
+        self.sampled_out = 0
+        self._sampled_out_by_name: Dict[str, int] = {}
+        self._summary_emitted = False
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
+
+    def set_sample_rate(self, rate: float) -> None:
+        """Keep roughly ``rate`` of :data:`SAMPLED_EVENTS` (1-in-N stride,
+        ``N = round(1/rate)``).  ``rate >= 1`` keeps everything."""
+        rate = float(rate)
+        if not rate > 0.0:
+            raise ValueError(f"sample rate must be > 0, got {rate}")
+        self._sample_stride = max(1, round(1.0 / rate)) if rate < 1.0 else 1
+        self._sample_n = 0
 
     def emit(self, type: str, **fields: Any) -> dict:  # noqa: A002 - event type
         """Append one event; returns the stamped dict."""
@@ -178,6 +216,16 @@ class EventSink:
             missing = required - set(ev)
             if missing:
                 raise ValueError(f"event {type!r} missing fields {sorted(missing)}")
+        if self._sample_stride > 1 and type in SAMPLED_EVENTS:
+            n = self._sample_n
+            self._sample_n = n + 1
+            if n % self._sample_stride:
+                self.sampled_out += 1
+                name = ev.get("name")
+                if name is not None:
+                    by = self._sampled_out_by_name
+                    by[name] = by.get(name, 0) + 1
+                return ev  # stamped + validated, deliberately not persisted
         self._q.append(ev)
         self.emitted += 1
         self._ensure_writer()
@@ -264,7 +312,17 @@ class EventSink:
 
     def close(self) -> None:
         """Drain + flush + fsync whatever is pending and release the
-        handle (idempotent)."""
+        handle (idempotent).  If sampling dropped events, one
+        ``sampling_summary`` carrying the tallies is appended first."""
+        if (self.sampled_out and not self._closed
+                and not self._summary_emitted):
+            self._summary_emitted = True  # before emit: close() may re-enter
+            self.emit(
+                "sampling_summary",
+                sampled_out=self.sampled_out,
+                per_name=dict(self._sampled_out_by_name),
+                stride=self._sample_stride,
+            )
         with self._state_lock:
             if self._closed:
                 return
@@ -358,9 +416,12 @@ def completeness(events: Union[str, Iterable[dict]]) -> dict:
     """Candidate accounting per search ``name``: asked vs terminal events.
 
     Returns ``{name: {"asked": n, "committed": ..., "culled": ...,
-    "pruned": ..., "skipped": ..., "quarantined": ..., "balanced": bool}}``
-    where ``balanced`` is the acceptance invariant
-    (terminals sum == asked)."""
+    "pruned": ..., "skipped": ..., "quarantined": ...,
+    "sampled_out": ..., "balanced": bool}}`` where ``balanced`` is the
+    acceptance invariant (terminals sum == asked — sampling never touches
+    accounting events, so the identity holds at any sample rate;
+    ``sampled_out`` reports how many forensic events the sink dropped for
+    that name, recovered from the close-time ``sampling_summary``)."""
     if isinstance(events, str):
         events = read_events(events)
     short = {
@@ -370,16 +431,23 @@ def completeness(events: Union[str, Iterable[dict]]) -> dict:
         "candidate_skipped": "skipped",
         "candidate_quarantined": "quarantined",
     }
+    def _fresh() -> Dict[str, Any]:
+        return {
+            "asked": 0, "committed": 0, "culled": 0,
+            "pruned": 0, "skipped": 0, "quarantined": 0, "sampled_out": 0,
+        }
+
     acc: Dict[str, Dict[str, Any]] = {}
     for ev in events:
         t = ev.get("type")
+        if t == "sampling_summary":
+            for name, n in (ev.get("per_name") or {}).items():
+                acc.setdefault(name, _fresh())["sampled_out"] += int(n)
+            continue
         name = ev.get("name")
         if name is None or (t != "candidate_asked" and t not in TERMINAL_EVENTS):
             continue
-        a = acc.setdefault(name, {
-            "asked": 0, "committed": 0, "culled": 0,
-            "pruned": 0, "skipped": 0, "quarantined": 0,
-        })
+        a = acc.setdefault(name, _fresh())
         if t == "candidate_asked":
             a["asked"] += 1
         else:

@@ -202,13 +202,21 @@ class MirroredStats(dict):
 
     Only *growth* of numeric values is mirrored (counter semantics);
     non-numeric entries (``mode`` strings) and resets pass through to the
-    dict alone."""
+    dict alone.
 
-    __slots__ = ("_prefix",)
+    The per-key :class:`Counter` objects are cached after the first
+    increment so the serving hot path pays one per-counter lock, not a name
+    format plus the registry's global lock, per request.  The cache is
+    invalidated by registry generation so a test's ``registry().reset()``
+    never leaves increments flowing into detached counters."""
+
+    __slots__ = ("_prefix", "_mirrors", "_gen")
 
     def __init__(self, prefix: str, init: Optional[dict] = None) -> None:
         super().__init__(init or {})
         self._prefix = prefix
+        self._mirrors: Dict[str, Counter] = {}
+        self._gen = -1
 
     def __setitem__(self, key, value) -> None:
         old = self.get(key, 0)
@@ -218,7 +226,14 @@ class MirroredStats(dict):
             and isinstance(old, (int, float))
             and value > old
         ):
-            counter(f"{self._prefix}.{key}").inc(value - old)
+            gen = _REGISTRY._generation
+            if self._gen != gen:
+                self._mirrors = {}
+                self._gen = gen
+            c = self._mirrors.get(key)
+            if c is None:
+                c = self._mirrors[key] = counter(f"{self._prefix}.{key}")
+            c.inc(value - old)
 
 
 class MetricsRegistry:
@@ -232,6 +247,9 @@ class MetricsRegistry:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._metrics: Dict[str, object] = {}
+        # bumped on reset() so cached metric handles (MirroredStats mirrors)
+        # know to re-resolve instead of incrementing dropped counters
+        self._generation = 0
 
     def _get_or_create(self, name: str, cls, factory):
         with self._lock:
@@ -268,6 +286,7 @@ class MetricsRegistry:
         """Drop every metric (tests and benchmark isolation)."""
         with self._lock:
             self._metrics = {}
+            self._generation += 1
 
 
 _REGISTRY = MetricsRegistry()

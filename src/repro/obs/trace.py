@@ -26,6 +26,12 @@ Design constraints, in order:
 * **monotonic clocks**: timestamps are ``time.perf_counter_ns`` offsets from
   a per-process epoch — immune to wall-clock steps; the wall-clock anchor is
   kept once per export for correlating with the event stream.
+* **samplable request spans**: per-request serving spans (opened with
+  ``sampled=True``) can be decimated with :meth:`Tracer.set_sample_rate` —
+  a deterministic 1-in-N counter stride, not an RNG, so a replayed workload
+  keeps the same spans.  Sampled-out spans cost one counter tick and return
+  the shared no-op; the ``sampled_out`` counter keeps the bookkeeping
+  honest.  Structural spans (search/round/compile) are never sampled out.
 
 Export is the Chrome trace ("complete" ``ph: "X"`` events) consumed by
 ``chrome://tracing`` and https://ui.perfetto.dev.
@@ -46,6 +52,7 @@ __all__ = [
     "span",
     "current_span",
     "export_chrome",
+    "set_sample_rate",
 ]
 
 
@@ -129,6 +136,11 @@ class Tracer:
         self._epoch_ns = time.perf_counter_ns()
         self._epoch_unix = time.time()
         self.dropped = 0  # spans discarded after a fork
+        # request-span sampling: keep 1 in _sample_stride of sampled=True
+        # spans (deterministic counter, no RNG — replays keep the same spans)
+        self._sample_stride = 1
+        self._sample_counter = itertools.count(0)
+        self.sampled_out = 0
 
     # ----------------------------------------------------------- lifecycle
     def enable(self) -> None:
@@ -144,6 +156,18 @@ class Tracer:
         self._local = threading.local()
         self._epoch_ns = time.perf_counter_ns()
         self._epoch_unix = time.time()
+        self._sample_stride = 1
+        self._sample_counter = itertools.count(0)
+        self.sampled_out = 0
+
+    def set_sample_rate(self, rate: float) -> None:
+        """Keep roughly ``rate`` of ``sampled=True`` spans (1-in-N stride,
+        ``N = round(1/rate)``).  ``rate >= 1`` keeps everything."""
+        rate = float(rate)
+        if not rate > 0.0:
+            raise ValueError(f"sample rate must be > 0, got {rate}")
+        self._sample_stride = max(1, round(1.0 / rate)) if rate < 1.0 else 1
+        self._sample_counter = itertools.count(0)
 
     def _after_fork(self) -> None:
         # the child inherits the parent's buffer; it must not re-export it
@@ -172,12 +196,19 @@ class Tracer:
         cat: str = "tuning",
         *,
         parent: Optional[Span] = None,
+        sampled: bool = False,
         **args: Any,
     ):
         """Context manager opening a child of ``parent`` (default: this
-        thread's current span).  Returns a shared no-op while disabled."""
+        thread's current span).  Returns a shared no-op while disabled.
+        ``sampled=True`` marks a high-rate per-request span subject to
+        :meth:`set_sample_rate` decimation."""
         if not self.enabled:
             return _NULL_SPAN
+        if sampled and self._sample_stride > 1:
+            if next(self._sample_counter) % self._sample_stride:
+                self.sampled_out += 1
+                return _NULL_SPAN
         explicit = parent is not None
         if not explicit:
             parent = self.current()
@@ -288,9 +319,21 @@ def tracer() -> Tracer:
     return _TRACER
 
 
-def span(name: str, cat: str = "tuning", *, parent: Optional[Span] = None, **args):
+def span(
+    name: str,
+    cat: str = "tuning",
+    *,
+    parent: Optional[Span] = None,
+    sampled: bool = False,
+    **args,
+):
     """Open a span on the process tracer (no-op context while disabled)."""
-    return _TRACER.span(name, cat, parent=parent, **args)
+    return _TRACER.span(name, cat, parent=parent, sampled=sampled, **args)
+
+
+def set_sample_rate(rate: float) -> None:
+    """Set the process tracer's request-span sample rate."""
+    _TRACER.set_sample_rate(rate)
 
 
 def current_span() -> Optional[Span]:

@@ -26,16 +26,24 @@ lazily on first sight, DB-warm-started) with its own
     out = d.executable(token_batch) if d.executable else fallback(d.point)
     router.observe(d, measured_seconds)          # feeds search / drift
 
-``begin``/``observe`` are serving-thread calls; compiles happen off-thread
-inside the tuners (see :mod:`repro.runtime.online`).
+``begin``/``observe`` are **thread-safe** and lock-light on the hot path:
+the exact-signature fast path reads one immutable dispatch snapshot (a dict
+swapped atomically whenever a context is created — no lock, no contention at
+any thread count), and the slow path (first sight of a signature, context
+creation) runs under the router lock while per-context state transitions are
+striped onto each tuner's own lock.  Compiles happen off-thread inside the
+tuners (see :mod:`repro.runtime.online`); ``begin(..., tenant=)`` threads
+per-tenant ε-credit accounting through to the context's tuner.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 from typing import Any, Callable, Mapping, Optional
 
 from repro.core import Autotuning, ExecutableCache
+from repro.core.measure import objective_quantile, resolve_measure_policy
 from repro.core.optimizer import NumericalOptimizer
 from repro.obs import metrics as _metrics
 
@@ -152,8 +160,14 @@ class ContextRouter:
         self._db_source = str(db_source)
         self._warm_start = bool(warm_start)
         self._specs: dict = {}
+        # router lock guards the slow path only (registration, context /
+        # fast-path-snapshot creation); the hot path never takes it
+        self._lock = threading.RLock()
         self._tuners: dict = {}  # encoded TuningKey -> OnlineTuner
-        self._fast: dict = {}  # exact call signature -> OnlineTuner (memo)
+        # exact call signature -> OnlineTuner: an IMMUTABLE snapshot.  Reads
+        # are lock-free (reference load); updates copy-on-write under the
+        # router lock and swap the reference atomically.
+        self._fast: dict = {}
         self._fast_max = 4096  # bound: naturally varied exact shapes on a
         # long-lived server must not grow the memo forever (rebuild is one
         # make_key, so wholesale clearing is cheap)
@@ -162,7 +176,8 @@ class ContextRouter:
     def register(self, name: str, **fields) -> RouteSpec:
         """Register a route; ``fields`` are :class:`RouteSpec` fields."""
         spec = RouteSpec(name=name, **fields)
-        self._specs[name] = spec
+        with self._lock:
+            self._specs[name] = spec
         return spec
 
     def spec(self, name: str) -> RouteSpec:
@@ -196,7 +211,15 @@ class ContextRouter:
 
     def _call_sig(self, name, args, kwargs, extra):
         try:
-            parts = [name, json.dumps(dict(extra or {}), sort_keys=True, default=repr)]
+            if extra:
+                try:  # common case: flat dict of hashable scalars — no
+                    e = tuple(sorted(extra.items()))  # json round-trip
+                    hash(e)
+                except TypeError:
+                    e = json.dumps(dict(extra), sort_keys=True, default=repr)
+            else:
+                e = ()
+            parts = [name, e]
             for src in (args, sorted((kwargs or {}).items())):
                 for v in src:
                     if hasattr(v, "shape") and hasattr(v, "dtype"):
@@ -208,11 +231,25 @@ class ContextRouter:
             return None
 
     def tuner(self, name: str, *args, extra=None, **kwargs) -> OnlineTuner:
-        """The (lazily created) tuner owning this call's context."""
+        """The (lazily created) tuner owning this call's context.
+
+        Hot path: one signature build + one lock-free dict read against the
+        immutable dispatch snapshot.  Slow path (snapshot miss): context
+        lookup/creation under the router lock, then a copy-on-write snapshot
+        swap so subsequent calls for this signature go lock-free."""
         sig = self._call_sig(name, args, kwargs, extra)
-        t = self._fast.get(sig) if sig is not None else None
-        if t is not None:
-            return t
+        if sig is not None:
+            t = self._fast.get(sig)  # immutable snapshot: no lock
+            if t is not None:
+                return t
+        with self._lock:
+            return self._tuner_slow(name, sig, args, kwargs, extra)
+
+    def _tuner_slow(self, name, sig, args, kwargs, extra) -> OnlineTuner:
+        if sig is not None:
+            t = self._fast.get(sig)  # re-check: another thread raced us here
+            if t is not None:
+                return t
         spec = self.spec(name)
         b_args, b_kwargs = bucket_args(args, kwargs, self._bucket)
         # knob domain from the bucketed shapes (shared across the bucket);
@@ -224,6 +261,10 @@ class ContextRouter:
         t = self._tuners.get(enc)
         if t is None:
             opt = spec.optimizer(space) if spec.optimizer is not None else None
+            policy = (
+                resolve_measure_policy(spec.measure)
+                if spec.measure is not None else None
+            )
             at = Autotuning(
                 space=space,
                 ignore=spec.ignore,
@@ -238,8 +279,21 @@ class ContextRouter:
                 key=key,
                 warm_start=self._warm_start,
                 db_source=self._db_source,
+                objective=policy.objective if policy is not None else None,
             )
-            drift = DriftDetector(**spec.drift) if spec.drift is not None else None
+            # the drift detector watches the same statistic the route tunes:
+            # a p99-objective route gets a 0.99-quantile detector unless the
+            # caller pinned one explicitly
+            drift_kw = dict(spec.drift) if spec.drift is not None else None
+            if (
+                drift_kw is not None
+                and policy is not None
+                and "quantile" not in drift_kw
+            ):
+                q = objective_quantile(policy.objective)
+                if q != 0.5:
+                    drift_kw["quantile"] = q
+            drift = DriftDetector(**drift_kw) if drift_kw is not None else None
             # defaults from the EXACT shapes: the caller's fallback dispatch
             # runs the kernel with these knobs on the real arguments, so they
             # must be legal for the shapes actually served, not the bucket
@@ -255,7 +309,7 @@ class ContextRouter:
                 drift=drift,
                 default_point=default_point,
                 name=enc,  # executables are keyed per-context + exact shapes
-                measure=spec.measure,
+                measure=policy if policy is not None else spec.measure,
                 # a fresh breaker per context: failure storms are gated where
                 # they happen, not across the whole route
                 breaker=dict(spec.breaker) if spec.breaker is not None else None,
@@ -263,13 +317,17 @@ class ContextRouter:
             self._tuners[enc] = t
             _metrics.gauge("router.contexts").set(len(self._tuners))
         if sig is not None:
-            if len(self._fast) >= self._fast_max:
-                self._fast.clear()
-            self._fast[sig] = t
+            # copy-on-write: readers keep their lock-free reference while we
+            # publish a new snapshot (wholesale restart when the memo is full)
+            fast = {} if len(self._fast) >= self._fast_max else dict(self._fast)
+            fast[sig] = t
+            self._fast = fast
         return t
 
     # ------------------------------------------------------------- serving
-    def begin(self, name: str, *args, extra=None, **kwargs) -> Decision:
+    def begin(
+        self, name: str, *args, extra=None, tenant=None, **kwargs
+    ) -> Decision:
         """Route one call: returns the decision of its context's tuner.
 
         A decision that carries an ``executable`` is always safe to run —
@@ -277,8 +335,11 @@ class ContextRouter:
         one (cold context, compile in flight) is served by the caller's
         fallback dispatch, so its knobs are clamped from the bucket's space
         into the exact shapes' space first: a bucket-legal block size is not
-        necessarily legal for an off-bucket exact shape."""
-        d = self.tuner(name, *args, extra=extra, **kwargs).begin(*args, **kwargs)
+        necessarily legal for an off-bucket exact shape.  ``tenant`` names
+        the request stream for per-tenant ε-credit budgeting."""
+        d = self.tuner(name, *args, extra=extra, **kwargs).begin(
+            *args, tenant=tenant, **kwargs
+        )
         if d.executable is None and (args or kwargs):
             try:
                 exact_space = self.spec(name).space(*args, **kwargs)
@@ -300,14 +361,18 @@ class ContextRouter:
         )
 
     def wait_pending(self) -> None:
-        for t in self._tuners.values():
+        with self._lock:
+            tuners = list(self._tuners.values())
+        for t in tuners:
             t.wait_pending()
 
     # ------------------------------------------------------------ inspection
     def contexts(self) -> list:
         """One summary dict per live context (for logs / debugging)."""
+        with self._lock:
+            items = list(self._tuners.items())
         out = []
-        for enc, t in self._tuners.items():
+        for enc, t in items:
             out.append(
                 {
                     "key": enc,
@@ -320,33 +385,29 @@ class ContextRouter:
         return out
 
     def stats(self) -> dict:
-        """Aggregate serving counters across every context."""
-        total = {
-            "contexts": len(self._tuners),
-            "calls": 0,
-            "explores": 0,
-            "exploits": 0,
-            "explore_candidates": 0,
-            "culled_explores": 0,
-            "deferred_explores": 0,
-            "inband_builds": 0,
-            "candidate_failures": 0,
-            "breaker_denied": 0,
-            "drift_resets": 0,
-            "searches_completed": 0,
-        }
-        for t in self._tuners.values():
-            for k in (
-                "calls", "explores", "exploits", "explore_candidates",
-                "culled_explores", "deferred_explores", "inband_builds",
-                "candidate_failures", "breaker_denied", "drift_resets",
-                "searches_completed",
-            ):
-                total[k] += t.stats_[k]
+        """Aggregate serving counters across every context.  Each context's
+        counters are read under its own tuner lock, so per-tuner accounting
+        identities survive into the aggregate even mid-traffic."""
+        keys = (
+            "calls", "explores", "exploits", "explore_candidates",
+            "culled_explores", "deferred_explores", "inband_builds",
+            "candidate_failures", "breaker_denied", "drift_resets",
+            "searches_completed", "explore_reps_decided", "stale_explore_reps",
+        )
+        with self._lock:
+            tuners = list(self._tuners.values())
+        total = {"contexts": len(tuners)}
+        total.update({k: 0 for k in keys})
+        for t in tuners:
+            with t._lock:
+                for k in keys:
+                    total[k] += t.stats_[k]
         total["cache"] = self.cache.stats()
         return total
 
     def snapshot(self) -> dict:
         """Cheap per-context health: each tuner's :meth:`OnlineTuner.snapshot`
         keyed by the encoded context (no cache walk, no drift stats)."""
-        return {enc: t.snapshot() for enc, t in self._tuners.items()}
+        with self._lock:
+            items = list(self._tuners.items())
+        return {enc: t.snapshot() for enc, t in items}

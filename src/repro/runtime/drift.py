@@ -44,6 +44,19 @@ def _median(values) -> Optional[float]:
     return 0.5 * (vals[mid - 1] + vals[mid])
 
 
+def _stat(values, q: float) -> Optional[float]:
+    """Window statistic at quantile ``q`` (0.5 delegates to :func:`_median`
+    so the default detector is bit-identical to the pre-quantile one)."""
+    if q == 0.5:
+        return _median(values)
+    vals = list(values)
+    if not vals:
+        return None
+    from repro.core.measure import quantile
+
+    return quantile(vals, q)
+
+
 class DriftDetector:
     """Sliding-window cost monitor with a frozen baseline.
 
@@ -71,6 +84,7 @@ class DriftDetector:
         factor: float = 1.5,
         severe_factor: Optional[float] = None,
         atol: float = 0.0,
+        quantile: float = 0.5,
     ) -> None:
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
@@ -85,6 +99,12 @@ class DriftDetector:
         if self.severe_factor < self.factor:
             raise ValueError("severe_factor must be >= factor")
         self.atol = float(atol)
+        if not (0.0 < quantile < 1.0):
+            raise ValueError(f"quantile must be in (0, 1), got {quantile}")
+        # which window statistic detection compares — 0.5 is the classic
+        # median detector; a p99-objective context watches 0.99 so drift is
+        # judged on the same statistic the tuner minimizes
+        self.quantile = float(quantile)
         self._baseline: deque = deque(maxlen=self.window)
         self._recent: deque = deque(maxlen=self.window)
         self.observed = 0  # finite samples since the last rebaseline
@@ -97,13 +117,17 @@ class DriftDetector:
         return len(self._baseline) >= self.window
 
     def baseline_median(self) -> Optional[float]:
-        return _median(self._baseline)
+        """Baseline window statistic (at :attr:`quantile`; the name predates
+        non-median detectors)."""
+        return _stat(self._baseline, self.quantile)
 
     def recent_median(self) -> Optional[float]:
-        """Median of the freshest costs — the detector's current estimate of
-        what the deployed configuration costs *now* (falls back to the
+        """Statistic of the freshest costs — the detector's current estimate
+        of what the deployed configuration costs *now* (falls back to the
         baseline while the recent window is still empty)."""
-        return _median(self._recent) if self._recent else _median(self._baseline)
+        if self._recent:
+            return _stat(self._recent, self.quantile)
+        return _stat(self._baseline, self.quantile)
 
     def rebaseline(self) -> None:
         """Forget everything measured so far: the next ``window`` samples
@@ -125,8 +149,8 @@ class DriftDetector:
         self._recent.append(cost)
         if len(self._recent) < self.min_samples:
             return 0
-        base = _median(self._baseline)
-        recent = _median(self._recent)
+        base = _stat(self._baseline, self.quantile)
+        recent = _stat(self._recent, self.quantile)
         level = 0
         if recent > self.severe_factor * base + self.atol:
             level = 2
@@ -138,7 +162,7 @@ class DriftDetector:
             # *detects* drift still contains pre-drift samples, but consumers
             # (the warm re-search noting the incumbent's live cost) want the
             # best estimate of what the deployed point costs now
-            fresh = _median(list(self._recent)[-self.min_samples:])
+            fresh = _stat(list(self._recent)[-self.min_samples:], self.quantile)
             self.events.append(
                 {"sample": self.observed, "level": level,
                  "baseline": base, "recent": fresh, "window_median": recent}
@@ -151,7 +175,7 @@ class DriftDetector:
             "observed": self.observed,
             "ready": self.ready,
             "baseline_median": self.baseline_median(),
-            "recent_median": _median(self._recent) if self._recent else None,
+            "recent_median": _stat(self._recent, self.quantile) if self._recent else None,
             "events": len(self.events),
         }
 

@@ -45,8 +45,20 @@ converges in fewer live requests than a fixed multi-rep schedule.
 behaviour; ``MeasurePolicy(mode="fixed", repeats=k)`` spends exactly ``k``
 requests per candidate and feeds the median.
 
-``begin``/``observe`` must be called from a single serving thread; only the
-builds run concurrently.
+``begin``/``observe`` are **thread-safe**: every state transition runs under
+one per-tuner lock (striped locking — different contexts never contend), so
+many concurrent request streams can route through the same context.  Under a
+``measure`` policy the racing protocol extends *across streams*: concurrent
+requests exploring the same candidate each contribute one repetition to its
+current rung, and a rep that arrives after its candidate was already decided
+by a sibling stream is discarded as stale (``stats_["stale_explore_reps"]``)
+rather than polluting the next candidate's rung.  Per-``tenant`` ε-credit
+budgets (``begin(..., tenant=)``) additionally ration exploration per
+request stream: each tenant may explore at most an ε-fraction of *its own*
+calls, so one chatty tenant cannot burn the whole episode's explore budget.
+The lock is never held across a compile or a measured request — builds stay
+on the background pool and the serving work happens between ``begin`` and
+``observe``.
 """
 from __future__ import annotations
 
@@ -60,9 +72,15 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from repro.core import Autotuning, CircuitBreaker, ExecutableCache
-from repro.core.measure import NoiseEstimate, resolve_measure_policy, summarize
+from repro.core.measure import (
+    NoiseEstimate,
+    objective_value,
+    resolve_measure_policy,
+    summarize,
+)
 from repro.obs import events as _events
 from repro.obs import metrics as _metrics
+from repro.obs.trace import tracer as _tracer
 
 from .drift import DriftDetector
 
@@ -90,6 +108,7 @@ class Decision:
     executable: Any = None
     seq: int = 0
     tuner: Optional["OnlineTuner"] = dataclasses.field(default=None, repr=False)
+    tenant: Optional[str] = None  # request stream this decision was billed to
 
 
 class OnlineTuner:
@@ -174,9 +193,17 @@ class OnlineTuner:
         self._sig_seen: dict = {}  # exact call signature -> sightings (bounded)
         self._default = dict(default_point) if default_point else None
         self._seq = 0
+        # one lock per tuner (the router's stripe): every begin/observe state
+        # transition runs under it, so concurrent streams through the same
+        # context stay consistent while different contexts never contend.
+        # RLock: internal transitions (drift reset → commit) re-enter.
+        self._lock = threading.RLock()
         # per-search-episode ε accounting (reset on converge / drift reset)
         self._episode_calls = 0
         self._episode_explores = 0
+        # per-tenant ε accounting within the episode: tenant -> counters
+        self._tenant_calls: dict = {}
+        self._tenant_explores: dict = {}
         # multi-rep explore measurement (None → one request per candidate)
         self.measure = None if measure is None else resolve_measure_policy(measure)
         if isinstance(breaker, dict):
@@ -184,6 +211,9 @@ class OnlineTuner:
         self.breaker: Optional[CircuitBreaker] = breaker
         self._rep_times: list = []  # current explore candidate's observed reps
         self._rep_key = None  # space.key of the candidate being repped
+        # explore decisions issued but not yet observed (begin..observe gap):
+        # the term that closes the rep-accounting identity mid-request
+        self._explore_inflight = 0
         self.events: list = []  # drift resets, with context
         # mirrored: every numeric increment lands in the process metrics
         # registry as online.<key> (ε-credit spend = online.explores)
@@ -200,6 +230,13 @@ class OnlineTuner:
             "breaker_denied": 0,  # calls whose exploration the breaker blocked
             "drift_resets": 0,
             "searches_completed": 0,
+            # cross-stream racing accounting: every explore request resolves
+            # to exactly one of {decided-candidate rep, buffered rep, stale
+            # rep, still-in-flight rep}, so explores == explore_reps_decided
+            # + stale_explore_reps + len(current rep buffer) +
+            # _explore_inflight at any consistent read point
+            "explore_reps_decided": 0,  # reps consumed by decided candidates
+            "stale_explore_reps": 0,  # reps for candidates already decided
         })
 
     # ------------------------------------------------------------ properties
@@ -213,6 +250,10 @@ class OnlineTuner:
 
     def exploit_point(self) -> dict:
         """Knobs a non-exploring call should serve with *right now*."""
+        with self._lock:
+            return self._exploit_point_locked()
+
+    def _exploit_point_locked(self) -> dict:
         at = self.at
         if at.finished or np.isfinite(at.best_cost):
             return at.best_point
@@ -221,28 +262,47 @@ class OnlineTuner:
     def snapshot(self) -> dict:
         """Cheap point-in-time view (no cache walk, no drift window math):
         the serving counters plus the breaker's gate state — what a
-        dashboard or ``repro.tune report`` polls between summary dumps."""
-        out = {
-            "name": self.name,
-            "calls": self.stats_["calls"],
-            "explores": self.stats_["explores"],
-            "exploits": self.stats_["exploits"],
-            "breaker_denied": self.stats_["breaker_denied"],
-            "drift_resets": self.stats_["drift_resets"],
-            "finished": self.at.finished,
-        }
+        dashboard or ``repro.tune report`` polls between summary dumps.
+        Taken under the tuner lock, so the accounting identities (calls ==
+        explores + exploits; explores == decided + stale + buffered +
+        in-flight reps) hold even while other threads are mid-``begin``."""
+        with self._lock:
+            out = {
+                "name": self.name,
+                "calls": self.stats_["calls"],
+                "explores": self.stats_["explores"],
+                "exploits": self.stats_["exploits"],
+                "breaker_denied": self.stats_["breaker_denied"],
+                "drift_resets": self.stats_["drift_resets"],
+                "explore_reps_decided": self.stats_["explore_reps_decided"],
+                "stale_explore_reps": self.stats_["stale_explore_reps"],
+                "explore_reps_buffered": len(self._rep_times),
+                "explore_inflight": self._explore_inflight,
+                "finished": self.at.finished,
+            }
         if self.breaker is not None:
             out["breaker"] = self.breaker.snapshot()
         return out
 
     def stats(self) -> dict:
-        out = dict(self.stats_)
-        out["finished"] = self.at.finished
-        out["num_evals"] = self.at.num_evals
+        with self._lock:
+            out = dict(self.stats_)
+            out["finished"] = self.at.finished
+            out["num_evals"] = self.at.num_evals
+            out["explore_reps_buffered"] = len(self._rep_times)
+            out["explore_inflight"] = self._explore_inflight
+            if self._tenant_calls:
+                out["tenants"] = {
+                    t: {
+                        "calls": self._tenant_calls.get(t, 0),
+                        "explores": self._tenant_explores.get(t, 0),
+                    }
+                    for t in self._tenant_calls
+                }
+            if self.drift is not None:
+                out["drift"] = self.drift.stats()
         if self._cache is not None:
             out["cache"] = self._cache.stats()
-        if self.drift is not None:
-            out["drift"] = self.drift.stats()
         if self.breaker is not None:
             out["breaker"] = self.breaker.stats()
         return out
@@ -306,7 +366,8 @@ class OnlineTuner:
                 if threading.get_ident() == serving_thread:
                     # only possible if a caller runs the future inline —
                     # surfaced in stats so benchmarks can assert it never does
-                    self.stats_["inband_builds"] += 1
+                    with self._lock:
+                        self.stats_["inband_builds"] += 1
                 return self._build(point, *args, **kwargs)
 
             return self._cache.get_or_build(key, build)
@@ -374,7 +435,8 @@ class OnlineTuner:
         """Ready executable for ``point`` if one exists, else ``None``.
         Non-blocking: a miss submits a background build so a later call can
         hit; it never compiles on the calling thread."""
-        ready, ex = self._ready(dict(point), args, kwargs)
+        with self._lock:
+            ready, ex = self._ready(dict(point), args, kwargs)
         if ready and not isinstance(ex, BaseException):
             return ex
         return None
@@ -382,30 +444,58 @@ class OnlineTuner:
     def wait_pending(self, timeout: Optional[float] = None) -> None:
         """Block until every background build submitted so far has finished.
         For tests, shutdown, and pre-stream prewarming — never call from the
-        serving hot path."""
-        _wait_futures(list(self._pending.values()), timeout=timeout)
+        serving hot path.  The tuner lock is *not* held while waiting (a
+        build must never deadlock against a serving thread)."""
+        with self._lock:
+            futs = list(self._pending.values())
+        _wait_futures(futs, timeout=timeout)
 
     def prewarm(self, points, *args, wait: bool = True, **kwargs) -> None:
         """Submit builds for ``points`` (e.g. every candidate of a small
         space) before serving starts; with ``wait`` blocks until done so the
         stream begins with a fully warm cache."""
-        for p in points:
-            self._submit(dict(p), args, kwargs)
+        with self._lock:
+            for p in points:
+                self._submit(dict(p), args, kwargs)
         if wait:
             self.wait_pending()
 
     # ------------------------------------------------------------- decisions
-    def _want_explore(self) -> bool:
+    def _want_explore(self, tenant: Optional[str] = None) -> bool:
         if self.epsilon <= 0.0:
             return False
-        return (self._episode_explores + 1) <= self.epsilon * self._episode_calls + 1e-12
+        if not (
+            (self._episode_explores + 1)
+            <= self.epsilon * self._episode_calls + 1e-12
+        ):
+            return False
+        if tenant is None:
+            return True
+        # per-tenant budget: the same deterministic credit rule applied to
+        # the tenant's own calls — a single tenant reproduces the global
+        # schedule exactly, and no tenant can spend more than ε of its own
+        # traffic on exploration regardless of how chatty it is
+        return (
+            (self._tenant_explores.get(tenant, 0) + 1)
+            <= self.epsilon * self._tenant_calls.get(tenant, 0) + 1e-12
+        )
 
-    def begin(self, *args, _force_explore: bool = False, **kwargs) -> Decision:
-        """Decide how to serve the next request; call from the serving thread.
+    def begin(
+        self, *args, tenant: Optional[str] = None, _force_explore: bool = False, **kwargs
+    ) -> Decision:
+        """Decide how to serve the next request (thread-safe).
 
         ``args``/``kwargs`` are the request's call arguments — they key the
         executable cache (shape-exact) and are what background builds
-        compile against."""
+        compile against.  ``tenant`` names the request stream for per-tenant
+        ε-credit accounting (``None`` = unattributed, global budget only)."""
+        with _tracer().span("request", cat="serve", sampled=True, ctx=self.name):
+            with self._lock:
+                return self._begin_locked(args, kwargs, tenant, _force_explore)
+
+    def _begin_locked(
+        self, args: tuple, kwargs: dict, tenant: Optional[str], _force_explore: bool
+    ) -> Decision:
         self._seq += 1
         self.stats_["calls"] += 1
         at = self.at
@@ -420,63 +510,99 @@ class OnlineTuner:
                 self.stats_["breaker_denied"] += 1
         if not at.finished and gate:
             self._episode_calls += 1
+            if tenant is not None:
+                if len(self._tenant_calls) >= 4096:  # bounded, like _sig_seen
+                    self._tenant_calls.clear()
+                    self._tenant_explores.clear()
+                self._tenant_calls[tenant] = self._tenant_calls.get(tenant, 0) + 1
             self._absorb_failed_candidates(args, kwargs, admit=admit)
-        if not at.finished and gate and (_force_explore or self._want_explore()):
+        if not at.finished and gate and (_force_explore or self._want_explore(tenant)):
             ready, ex = self._ready(at.point, args, kwargs, admit=admit or _force_explore)
             if ready and not isinstance(ex, BaseException):
                 self._episode_explores += 1
+                if tenant is not None:
+                    self._tenant_explores[tenant] = (
+                        self._tenant_explores.get(tenant, 0) + 1
+                    )
                 self.stats_["explores"] += 1
-                return Decision(EXPLORE, at.point, ex, self._seq, self)
+                self._explore_inflight += 1
+                return Decision(EXPLORE, at.point, ex, self._seq, self, tenant)
             if not ready:
                 self.stats_["deferred_explores"] += 1
             # failed build: absorbed on the next call; exploit this one
         self.stats_["exploits"] += 1
-        point = self.exploit_point()
+        point = self._exploit_point_locked()
         executable = None
         if self._build is not None:
             ready, ex = self._ready(point, args, kwargs, admit=admit)
             if ready and not isinstance(ex, BaseException):
                 executable = ex
-        return Decision(EXPLOIT, point, executable, self._seq, self)
+        return Decision(EXPLOIT, point, executable, self._seq, self, tenant)
 
     def observe(self, decision: Decision, cost: float) -> int:
-        """Deliver the measured cost of a served decision.
+        """Deliver the measured cost of a served decision (thread-safe).
 
         Explore costs feed the search (committing to the DB on
         convergence); exploit costs feed drift detection once the search has
         converged.  With a ``measure`` policy an explore cost is one
-        *repetition* — the candidate advances only once racing decides it.
-        Returns the drift level acted on this call (0 = none)."""
+        *repetition* — the candidate advances only once racing decides it,
+        and concurrent streams' reps accumulate on the same rung.  A rep
+        whose candidate was already decided by a sibling stream (or swept
+        away by a drift reset) between this request's ``begin`` and its
+        ``observe`` is discarded as stale — feeding it would attribute the
+        old candidate's cost to the new one.  Returns the drift level acted
+        on this call (0 = none)."""
         cost = float(cost)
-        at = self.at
-        if decision.kind == EXPLORE:
-            if self.breaker is not None:
-                if np.isfinite(cost):
-                    self.breaker.record_success()
-                else:
-                    self.breaker.record_failure()
-            if not at.finished:
+        with self._lock:
+            at = self.at
+            if decision.kind == EXPLORE:
+                if self._explore_inflight > 0:  # lands from the begin() gap
+                    self._explore_inflight -= 1
+                if self.breaker is not None:
+                    if np.isfinite(cost):
+                        self.breaker.record_success()
+                    else:
+                        self.breaker.record_failure()
+                if at.finished:
+                    # decided after this decision was issued (sibling stream
+                    # finished the search / absorbed the candidate)
+                    self.stats_["stale_explore_reps"] += 1
+                    return 0
+                _events.emit("explore_rep", name=self.name,
+                             point=dict(decision.point), cost=cost)
                 if self.measure is None:
+                    if at.space.key(decision.point) != at.space.key(at.point):
+                        self.stats_["stale_explore_reps"] += 1
+                        return 0
+                    self.stats_["explore_reps_decided"] += 1
                     self.stats_["explore_candidates"] += 1
                     at.exec(cost)
                 else:
-                    self._feed_rep(cost)
+                    self._feed_rep(cost, decision)
                 if at.finished:
                     self._on_search_complete()
-            return 0
-        if self.drift is not None and at.finished:
-            level = self.drift.observe(cost)
-            if level > 0:
-                self._drift_reset(level)
-                return level
+                return 0
+            if self.drift is not None and at.finished:
+                level = self.drift.observe(cost)
+                if level > 0:
+                    self._drift_reset(level)
+                    return level
         return 0
 
     # ------------------------------------------------- multi-rep exploration
-    def _feed_rep(self, cost: float) -> None:
+    def _feed_rep(self, cost: float, decision: Decision) -> None:
         """One observed repetition of the current explore candidate; feeds
-        the search only once the racing policy reaches a verdict."""
+        the search only once the racing policy reaches a verdict.  Keyed by
+        the *decision's* point: under cross-stream racing the candidate may
+        have advanced between this request's begin and observe, in which
+        case the rep is stale and dropped with accounting."""
         at = self.at
         key = at.space.key(at.point)
+        if at.space.key(decision.point) != key:
+            # the candidate this rep was served at is no longer the one
+            # being raced — a sibling stream's rep decided it already
+            self.stats_["stale_explore_reps"] += 1
+            return
         if self._rep_key != key:  # candidate changed under us (reset, skip)
             self._rep_times = []
             self._rep_key = key
@@ -485,6 +611,7 @@ class OnlineTuner:
         if verdict is None:
             return  # escalate: the next explore request reps this candidate
         final_cost, culled = verdict
+        self.stats_["explore_reps_decided"] += len(self._rep_times)
         self._rep_times = []
         self._rep_key = None
         self.stats_["explore_candidates"] += 1
@@ -497,15 +624,22 @@ class OnlineTuner:
         buffered candidate.  Deterministic given the observed costs: decisions
         happen at ladder rungs only, culling when the candidate's CI low end
         is beyond the incumbent's noise band (plus margin), stopping early
-        when it clearly wins, finalizing at the ladder top regardless."""
+        when it clearly wins, finalizing at the ladder top regardless.  The
+        racing/cull arithmetic is always median-based; the *finalized* cost
+        fed to the search is the policy's objective statistic over the reps
+        (identical for ``objective="median"``)."""
         p = self.measure
         n = len(self._rep_times)
         noise = NoiseEstimate(p.abs_noise, p.rel_noise)
         med, _, lo, hi = summarize(self._rep_times, noise)
+        if p.objective in ("median", "p50"):
+            final = med
+        else:
+            final = objective_value(self._rep_times, p.objective)
         if p.mode == "fixed":
-            return (med, False) if n >= p.repeats else None
+            return (final, False) if n >= p.repeats else None
         if n >= p.ladder[-1]:
-            return (med, False)
+            return (final, False)
         if n not in p.ladder:
             return None  # between rungs
         inc = float(self.at.best_cost)
@@ -513,12 +647,12 @@ class OnlineTuner:
             # establishing the incumbent: a mid-ladder median is denoised
             # enough to race everything that follows against
             rung = p.ladder[min(1, len(p.ladder) - 1)]
-            return (med, False) if n >= rung else None
+            return (final, False) if n >= rung else None
         inc_floor = noise.floor(inc)
         if lo > inc + inc_floor * (1.0 + p.margin):
-            return (med, True)  # dominated beyond the noise floor: cull
+            return (final, True)  # dominated beyond the noise floor: cull
         if hi < inc - inc_floor:
-            return (med, False)  # clear improvement: no more reps needed
+            return (final, False)  # clear improvement: no more reps needed
         return None  # within noise of the incumbent: climb the ladder
 
     # --------------------------------------------------------- state changes
@@ -526,6 +660,10 @@ class OnlineTuner:
         self.stats_["searches_completed"] += 1
         self._episode_calls = 0
         self._episode_explores = 0
+        self._tenant_calls.clear()
+        self._tenant_explores.clear()
+        if self._rep_times:  # an undecided rung at convergence is stale
+            self.stats_["stale_explore_reps"] += len(self._rep_times)
         self._rep_times = []
         self._rep_key = None
         if self.drift is not None:
@@ -564,6 +702,10 @@ class OnlineTuner:
             self.drift.rebaseline()
         self._episode_calls = 0
         self._episode_explores = 0
+        self._tenant_calls.clear()
+        self._tenant_explores.clear()
+        if self._rep_times:
+            self.stats_["stale_explore_reps"] += len(self._rep_times)
         self._rep_times = []  # pre-reset reps describe the old environment
         self._rep_key = None
         self.stats_["drift_resets"] += 1

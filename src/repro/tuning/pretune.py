@@ -275,6 +275,12 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
              "(portfolio); default: plain CSA — same total tell budget either way",
     )
     ap.add_argument(
+        "--objective", choices=("median", "p95", "p99"), default=None,
+        help="statistic a candidate's measured repetitions reduce to "
+             "(default median — classic PATSMA; p95/p99 tune for tail "
+             "latency and stamp the objective on the committed records)",
+    )
+    ap.add_argument(
         "--shard", type=str, default=None, metavar="I/N",
         help="tune only this worker's deterministic slice of the grid "
              "(stable context-fingerprint hash mod N — N workers with "
@@ -413,6 +419,7 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
                 measure=args.measure,
                 measure_stats=mstats,
                 strategy=args.strategy,
+                objective=args.objective,
                 cost_fn=cost_fn,
                 warm_start=not args.no_warm_start,
             )
@@ -427,6 +434,7 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
             journal.commit(key, rec)
             crashed = f" crashed={rec.crashed}" if rec.crashed else ""
             strat = f" strategy={rec.strategy}" if rec.strategy and rec.strategy != "csa" else ""
+            obj = f" objective={rec.objective}" if rec.objective and rec.objective != "median" else ""
             raced = ""
             if mstats.get("mode") == "adaptive" and mstats.get("measured"):
                 raced = (f" reps={mstats['reps']}"
@@ -434,7 +442,7 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
                          f" pruned={mstats['pruned_roofline']}")
             print(
                 f"  {name}/{label}: best={rec.point} cost={rec.cost * 1e3:.2f}ms "
-                f"evals={rec.evals}{crashed}{strat}{raced} ({dt:.1f}s)"
+                f"evals={rec.evals}{crashed}{strat}{obj}{raced} ({dt:.1f}s)"
             )
             n_done += 1
         db.save()

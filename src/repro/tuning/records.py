@@ -212,10 +212,13 @@ class TuningRecord:
     stored cost (standard deviation over the repetitions the measurement
     engine actually spent on the best point).  ``strategy`` is the search
     strategy spec that produced the record (``"csa"``, ``"csa+nm"``,
-    ``"csa|nm"``, ... — see :func:`repro.core.strategy.make_strategy`).
-    All three are optional: records written before these fields existed —
-    and costs delivered by user cost functions — load as ``None``, which
-    every consumer must treat as "unknown"."""
+    ``"csa|nm"``, ... — see :func:`repro.core.strategy.make_strategy`);
+    ``objective`` is the statistic the stored cost minimizes (``"median"``,
+    ``"p95"``, ``"p99"`` — see :data:`repro.core.measure.OBJECTIVES`), so a
+    p99-tuned record is never mistaken for a median cost.  All of these are
+    optional: records written before the fields existed — and costs
+    delivered by user cost functions — load as ``None``, which every
+    consumer must treat as "unknown"."""
 
     key: TuningKey
     point: dict
@@ -227,6 +230,7 @@ class TuningRecord:
     cost_std: Optional[float] = None  # std over the best point's measured reps
     repeats_spent: Optional[int] = None  # reps behind the stored cost
     strategy: Optional[str] = None  # search strategy spec behind the record
+    objective: Optional[str] = None  # statistic the stored cost minimizes
 
     def known_std(self) -> Optional[float]:
         """The record's measured standard deviation, or ``None`` when it
@@ -250,6 +254,7 @@ class TuningRecord:
             "cost_std": self.cost_std,
             "repeats_spent": self.repeats_spent,
             "strategy": self.strategy,
+            "objective": self.objective,
         }
 
     @classmethod
@@ -257,6 +262,7 @@ class TuningRecord:
         cost_std = d.get("cost_std")
         repeats_spent = d.get("repeats_spent")
         strategy = d.get("strategy")
+        objective = d.get("objective")
         return cls(
             key=TuningKey.from_json(d["key"]),
             point=dict(d["point"]),
@@ -268,4 +274,5 @@ class TuningRecord:
             cost_std=float(cost_std) if cost_std is not None else None,
             repeats_spent=int(repeats_spent) if repeats_spent is not None else None,
             strategy=str(strategy) if strategy is not None else None,
+            objective=str(objective) if objective is not None else None,
         )

@@ -95,4 +95,5 @@ def record_from(autotuner, key, *, source: str = "online") -> Optional[TuningRec
         cost_std=cost_std,
         repeats_spent=repeats_spent,
         strategy=getattr(autotuner, "strategy", None),
+        objective=getattr(autotuner, "objective", None),
     )
