@@ -38,6 +38,7 @@ BENCHES = [
     "obs_overhead",  # observability: tuning throughput obs off vs on (gate 1.05)
     "step_autotune",  # §2.4: exec modes on a real train step
     "grad_compression",  # DESIGN §7: compressed DP reduction
+    "launch_tuning",  # launch-level knobs: tuned vs default across the zoo
     "roofline",  # §Roofline report from the dry-run JSONL
 ]
 

@@ -40,7 +40,7 @@ from .measure import (
 )
 from .nelder_mead import NelderMead
 from .optimizer import NumericalOptimizer
-from .space import ChoiceDim, FloatDim, IntDim, LogIntDim, SearchSpace
+from .space import ChoiceDim, Constraint, FloatDim, IntDim, LogIntDim, SearchSpace
 from .strategy import (
     Pipeline,
     Portfolio,
@@ -65,6 +65,7 @@ __all__ = [
     "make_strategy",
     "strategy_label",
     "SearchSpace",
+    "Constraint",
     "IntDim",
     "FloatDim",
     "LogIntDim",

@@ -172,6 +172,13 @@ class Autotuning:
         self._measurements = 0  # target iterations spent on tuning (incl. ignored)
         self._history: list = []  # (point_dict, cost)
         self.skip_reasons: dict = {}  # reason -> count of tagged skip() calls
+        # declarative validity predicates (space.constraints): candidates a
+        # predicate rejects are charged inf via skip(reason="constraint") at
+        # zero compile/measure cost — before measure_batch ever sees them
+        self.constraint_violations: dict = {}  # constraint name -> prune count
+        self._constraint_keys: set = set()  # space.key of pruned points
+        self._in_constraint_skip = False  # re-entrancy guard for _skip_invalid
+        self._round_no = 0  # batch round counter (obs candidate_asked events)
         self._measure_meta: dict = {}  # space.key -> measurement bookkeeping
         self._measured_costs: dict = {}  # space.key -> last *real* measured cost
         # persistent tuning store (repro.tuning): exact hit / warm seed
@@ -278,11 +285,16 @@ class Autotuning:
     def num_crashed(self) -> int:
         """Distinct visited candidates whose (final) cost was non-finite —
         i.e. configurations that crashed or were rejected by the measurement
-        layer.  Surfaced on committed tuning records."""
+        layer.  Constraint-pruned candidates are excluded: a validity
+        predicate rejecting a point is the *space* working as declared, not a
+        crash.  Surfaced on committed tuning records."""
         seen: dict = {}
         for p, c in self._history:
             seen[self.space.key(p)] = c
-        return sum(1 for c in seen.values() if not np.isfinite(c))
+        return sum(
+            1 for k, c in seen.items()
+            if not np.isfinite(c) and k not in self._constraint_keys
+        )
 
     @property
     def history(self) -> list:
@@ -345,6 +357,7 @@ class Autotuning:
             self.optimizer.reset(level)
         self._cost_cache.clear()
         if level >= 1:
+            self._constraint_keys.clear()  # derived from the cleared history
             self._history.clear()
             # measurement bookkeeping is pre-drift data too: in particular a
             # roofline-pruned candidate (charged its analytic bound, never
@@ -379,6 +392,7 @@ class Autotuning:
     # ------------------------------------------------- start/end (Runtime)
     def start(self) -> dict:
         """Begin the measured section; returns the candidate to use."""
+        self._skip_invalid()
         if not self.finished:
             self._t0 = time.perf_counter()
         return self.point
@@ -399,9 +413,16 @@ class Autotuning:
         returned solution)."""
         if not self.finished:
             self._feed(float(cost))
+        self._skip_invalid()
         return self.point
 
-    def skip(self, cost: float = np.inf, *, reason: Optional[str] = None) -> dict:
+    def skip(
+        self,
+        cost: float = np.inf,
+        *,
+        reason: Optional[str] = None,
+        detail: Optional[str] = None,
+    ) -> dict:
         """Reject the current candidate outright and advance to the next one.
 
         Unlike :meth:`exec`, the cost is delivered immediately — ``ignore``
@@ -415,7 +436,9 @@ class Autotuning:
 
         ``reason`` tags the rejection for run summaries (``skip_reasons``):
         the resilience layer distinguishes ``"build-failed"``, ``"timeout"``,
-        and ``"quarantined"`` skips when reporting why a search starved."""
+        and ``"quarantined"`` skips when reporting why a search starved;
+        the constraint layer charges predicate-pruned candidates through
+        ``reason="constraint"`` with the violated predicate as ``detail``."""
         if not self.finished:
             if reason is not None:
                 self.skip_reasons[reason] = self.skip_reasons.get(reason, 0) + 1
@@ -424,10 +447,15 @@ class Autotuning:
                 if reason == "quarantined":
                     _events.emit("candidate_quarantined",
                                  name=self.ctx_name(), point=dict(self._point))
+                elif detail is not None:
+                    _events.emit("candidate_skipped", name=self.ctx_name(),
+                                 point=dict(self._point), reason=str(reason),
+                                 detail=str(detail))
                 else:
                     _events.emit("candidate_skipped", name=self.ctx_name(),
                                  point=dict(self._point), reason=str(reason))
             self._deliver(float(cost), cacheable=False)
+        self._skip_invalid()
         return self.point
 
     def note(self, point: dict, cost: float) -> None:
@@ -558,6 +586,42 @@ class Autotuning:
             if guard > 100_000:  # safety: pathological optimizer loop
                 return
 
+    def _note_pruned(self, point: dict, violated: str) -> None:
+        """Bookkeeping shared by both prune paths: the violated-predicate
+        tally and the key set that keeps pruned points out of
+        :attr:`num_crashed`."""
+        self.constraint_violations[violated] = (
+            self.constraint_violations.get(violated, 0) + 1
+        )
+        self._constraint_keys.add(self.space.key(point))
+
+    def _skip_invalid(self) -> None:
+        """Auto-skip constraint-invalid candidates before presenting one.
+
+        Runs at the sequential presentation points (``start``/``exec``/
+        ``skip``/``single_exec``) — *not* inside ``__init__``/``reset`` —
+        so the batch ask/tell protocol never sees a half-delivered round:
+        batch mode prunes inside :meth:`_batch_round` instead.  Each invalid
+        candidate is charged ``inf`` through :meth:`skip`
+        (``reason="constraint"``) with zero compile/measure cost, and is
+        *not* cached, so ``reset(level >= 1)`` makes it revisitable."""
+        if not self.space.constraints or self._in_constraint_skip:
+            return
+        self._in_constraint_skip = True
+        try:
+            guard = 0
+            while not self.finished:
+                violated = self.space.check(self._point)
+                if violated is None:
+                    return
+                self._note_pruned(self._point, violated)
+                self.skip(reason="constraint", detail=violated)
+                guard += 1
+                if guard > 100_000:  # safety: fully-infeasible space
+                    return
+        finally:
+            self._in_constraint_skip = False
+
     # ------------------------------------------------- pre-programmed modes
     # Paper Algorithm 3.  `point_arg` semantics: the function receives the
     # decoded point dict's values in declaration order, prepended to *args
@@ -573,6 +637,7 @@ class Autotuning:
     def single_exec(self, func: Callable, *args, **kwargs):
         """One tuning iteration per call; ``func`` returns the cost
         (paper ``singleExec``)."""
+        self._skip_invalid()
         if self.finished:
             return func(*self._point_args(self.point), *args, **kwargs)
         cost = func(*self._point_args(self.point), *args, **kwargs)
@@ -654,6 +719,7 @@ class Autotuning:
             if not zs:
                 break
             round_no += 1
+            self._round_no = round_no
             with _tracer().span("round", round=round_no):
                 self._batch_round(zs, measure_batch)
         return round_no
@@ -671,6 +737,32 @@ class Autotuning:
             k for k in unique
             if not (self._use_cache and k in self._cost_cache)
         ]
+        # constraint predicates run *before* compile/measure: invalid points
+        # are charged inf here at zero cost — measure_batch never sees them.
+        # The driver emits the asked/skipped event pair itself (the
+        # measurement layer's emitter only sees the points it receives), so
+        # the completeness identity asked == terminals keeps holding.
+        pruned: dict = {}
+        if self.space.constraints:
+            for k in to_measure:
+                violated = self.space.check(unique[k])
+                if violated is None:
+                    continue
+                pruned[k] = float(np.inf)
+                self.skip_reasons["constraint"] = (
+                    self.skip_reasons.get("constraint", 0) + 1
+                )
+                self._note_pruned(unique[k], violated)
+                if self.verbose:
+                    log.info("prune %s (constraint %s)", unique[k], violated)
+                if _events.sink() is not None:
+                    ctx = self.ctx_name()
+                    _events.emit("candidate_asked", name=ctx,
+                                 point=dict(unique[k]), round=self._round_no)
+                    _events.emit("candidate_skipped", name=ctx,
+                                 point=dict(unique[k]), reason="constraint",
+                                 detail=violated)
+            to_measure = [k for k in to_measure if k not in pruned]
         measured: dict = {}
         if to_measure:
             pts = [dict(unique[k]) for k in to_measure]
@@ -717,8 +809,14 @@ class Autotuning:
                     self._measurements += 1
         full = []
         for k, p in zip(keys, points):
-            # measured this round, or answered by the cross-round cache
-            c = measured[k] if k in measured else self._cost_cache[k]
+            # measured this round, constraint-pruned this round, or answered
+            # by the cross-round cache
+            if k in measured:
+                c = measured[k]
+            elif k in pruned:
+                c = pruned[k]
+            else:
+                c = self._cost_cache[k]
             if self._use_cache:
                 self._cost_cache[k] = c
             self._evals += 1

@@ -55,13 +55,15 @@ class HardwareSpec:
     peak_flops: float  # FLOP/s (bf16)
     hbm_bw: float  # bytes/s
     ici_bw: float  # bytes/s per link
+    hbm_bytes: float = 16e9  # HBM capacity per chip (launch-space feasibility)
 
     def __str__(self) -> str:
         return self.name
 
 
-# Brief-mandated constants: 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI.
-TPU_V5E = HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9)
+# Brief-mandated constants: 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI;
+# 16 GB HBM per chip.
+TPU_V5E = HardwareSpec("tpu-v5e", 197e12, 819e9, 50e9, 16e9)
 
 
 class RuntimeCost:

@@ -15,7 +15,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
-__all__ = ["IntDim", "FloatDim", "LogIntDim", "ChoiceDim", "SearchSpace"]
+__all__ = ["IntDim", "FloatDim", "LogIntDim", "ChoiceDim", "Constraint", "SearchSpace"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,16 +113,51 @@ class ChoiceDim:
         return float(np.clip(2.0 * (i / (n - 1)) - 1.0, -1.0, 1.0))
 
 
-class SearchSpace:
-    """Ordered collection of dimensions with vector encode/decode."""
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """Declarative validity predicate over decoded points.
 
-    def __init__(self, dims: Sequence[Any]) -> None:
+    ``predicate(point) -> bool`` receives the decoded ``{name: value}`` dict
+    and returns True for legal points.  Constraints are evaluated *before*
+    compile/measure: the Autotuning driver charges failing candidates ``inf``
+    via the ``skip(reason="constraint")`` path at zero compile cost, so an
+    intractable product space (mesh factorizations × microbatches × remat ×
+    flags) collapses to its feasible region for free — the model-checking
+    style pruning of "Auto-Tuning HPC Programs Using Model Checking"
+    (PAPERS.md), expressed as plain python predicates.
+    """
+
+    name: str
+    predicate: Any  # Callable[[dict], bool]
+    describe: str = ""  # human-readable clause for docs / `pretune --list`
+
+    def ok(self, point: dict) -> bool:
+        try:
+            return bool(self.predicate(point))
+        except Exception:
+            # a predicate that cannot even evaluate the point rejects it
+            return False
+
+
+class SearchSpace:
+    """Ordered collection of dimensions with vector encode/decode.
+
+    ``constraints`` (optional) are :class:`Constraint` validity predicates
+    over decoded points; see :meth:`check`.  Spaces without constraints are
+    byte-identical to the pre-constraint era (fingerprints, codec, keys).
+    """
+
+    def __init__(self, dims: Sequence[Any], constraints: Sequence[Constraint] = ()) -> None:
         if not dims:
             raise ValueError("empty search space")
         self.dims = list(dims)
         names = [d.name for d in self.dims]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate dim names: {names}")
+        self.constraints = tuple(constraints)
+        cnames = [c.name for c in self.constraints]
+        if len(set(cnames)) != len(cnames):
+            raise ValueError(f"duplicate constraint names: {cnames}")
 
     @classmethod
     def uniform(cls, lo, hi, dim: int, integer: bool = True) -> "SearchSpace":
@@ -162,6 +197,66 @@ class SearchSpace:
         if isinstance(values, dict):
             return tuple(values[d.name] for d in self.dims)
         return tuple(values)
+
+    def check(self, point) -> "str | None":
+        """Name of the first violated constraint for a decoded point, or None.
+
+        Accepts a ``{name: value}`` dict or an ordered value sequence."""
+        if not self.constraints:
+            return None
+        if not isinstance(point, dict):
+            point = {d.name: v for d, v in zip(self.dims, point)}
+        for c in self.constraints:
+            if not c.ok(point):
+                return c.name
+        return None
+
+    def _dim_values(self, d) -> "list | None":
+        """All representable values of one dim, or None if continuous."""
+        if isinstance(d, ChoiceDim):
+            return list(d.values)
+        if isinstance(d, LogIntDim):
+            return [d.lo * (2**k) for k in range(d._steps + 1)]
+        if isinstance(d, IntDim):
+            return list(range(d.lo, d.hi + 1))
+        return None  # FloatDim and friends: continuous
+
+    def size(self) -> "int | None":
+        """Cardinality of the raw product space (None if any dim is
+        continuous)."""
+        n = 1
+        for d in self.dims:
+            vals = self._dim_values(d)
+            if vals is None:
+                return None
+            n *= len(vals)
+        return n
+
+    def grid_points(self):
+        """Iterate every representable point (dicts).  Raises for continuous
+        spaces — guard with :meth:`size`."""
+        import itertools
+
+        per_dim = []
+        for d in self.dims:
+            vals = self._dim_values(d)
+            if vals is None:
+                raise ValueError(f"dim {d.name!r} is continuous; no finite grid")
+            per_dim.append(vals)
+        names = self.names
+        for combo in itertools.product(*per_dim):
+            yield dict(zip(names, combo))
+
+    def constrained_size(self, cap: int = 1_000_000) -> "int | None":
+        """Count of points that satisfy every constraint — the feasible-region
+        size operators see in ``pretune --list``.  None if the space is
+        continuous or its raw size exceeds ``cap`` (enumeration too big)."""
+        raw = self.size()
+        if raw is None or raw > cap:
+            return None
+        if not self.constraints:
+            return raw
+        return sum(1 for p in self.grid_points() if self.check(p) is None)
 
     def resolution(self) -> float:
         """Coarsest normalized grid step across dims (0.0 if all continuous).

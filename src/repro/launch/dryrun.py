@@ -1,11 +1,23 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count at first init).  Tests override via REPRO_DRYRUN_DEVICES.
-if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={os.environ['REPRO_DRYRUN_DEVICES']}"
-    )
+
+
+def _ensure_host_platform_devices(default: int = 512) -> None:
+    """Set the host-platform device count, PRESERVING any other XLA_FLAGS the
+    user (or the flag-tuning layer) already exported — this module used to
+    clobber the whole variable.  Only an existing
+    ``--xla_force_host_platform_device_count`` token is replaced; everything
+    else is kept verbatim.  Must run before any jax import (jax locks the
+    device count at first init).  Tests override via REPRO_DRYRUN_DEVICES."""
+    n = int(os.environ.get("REPRO_DRYRUN_DEVICES") or default)
+    kept = [
+        f for f in os.environ.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    ]
+    kept.append(f"--xla_force_host_platform_device_count={n}")
+    os.environ["XLA_FLAGS"] = " ".join(kept)
+
+
+_ensure_host_platform_devices()
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production mesh; record memory analysis, cost analysis and the collective
@@ -220,6 +232,7 @@ def run_cell(
     sp: bool = False,
     probes: bool = True,
     verbose: bool = True,
+    compiler_options: dict | None = None,
 ) -> dict:
     t0 = time.time()
     cfg = configs.get_tiny(arch) if tiny else configs.get(arch)
@@ -246,7 +259,12 @@ def run_cell(
     with sharding_context(mesh, rules):
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=donate).lower(*args)
-        compiled = lowered.compile()
+        # tuned XLA flags are applied per-compile (launch.spaces.XLA_PRESETS)
+        # — never via the import-time XLA_FLAGS env hack
+        if compiler_options:
+            compiled = lowered.compile(compiler_options=dict(compiler_options))
+        else:
+            compiled = lowered.compile()
     mem = compiled.memory_analysis()
     step_cost = costing.measure(compiled)
 
@@ -322,6 +340,28 @@ def run_cell(
     return result
 
 
+def _tuned_point(db, arch: str, shape_name: str, mesh_spec) -> dict | None:
+    """Stored launch point for this cell, trying the dryrun-mode key first
+    and falling back to the deterministic model-mode key (the records CI's
+    `pretune --launch` commits)."""
+    from repro.launch.spaces import launch_key, launch_space
+
+    cfg = configs.get(arch)
+    shape = configs.SHAPES[shape_name]
+    if mesh_spec is not None:
+        n = 1
+        for s in mesh_spec[0]:
+            n *= int(s)
+    else:
+        n = jax.device_count()
+    space = launch_space(cfg, shape, n)
+    for mode in ("dryrun", "model"):
+        rec = db.get(launch_key(arch, shape, n, space, mode=mode))
+        if rec is not None:
+            return dict(rec.point)
+    return None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default=None)
@@ -340,6 +380,13 @@ def main():
         "--mesh", type=str, default=None,
         help="override mesh shape, e.g. '4,4' (data,model) or '2,2,4' (pod,data,model)",
     )
+    ap.add_argument(
+        "--tune", action="store_true",
+        help="apply each cell's tuned launch point from --db (launch.spaces) "
+             "and report tuned vs default end-to-end step estimate",
+    )
+    ap.add_argument("--db", type=str, default=None,
+                    help="tuning DB holding launch/<arch> records (with --tune)")
     args = ap.parse_args()
 
     mesh_spec = None
@@ -362,16 +409,59 @@ def main():
     else:
         cells.append((args.arch, args.shape))
 
+    tuned_db = None
+    if args.tune:
+        if not args.db:
+            raise SystemExit("--tune needs --db <tuning db with launch records>")
+        from repro.tuning import TuningDB
+
+        tuned_db = TuningDB(args.db)
+
+    def _bound(r):
+        rf = r.get("roofline") or {}
+        return max(rf.get("compute_s", 0), rf.get("memory_s", 0),
+                   rf.get("collective_s", 0))
+
     meshes = [args.multi_pod] if not args.both_meshes else [False, True]
     results = []
     for arch, shape in cells:
         for mp in meshes:
+            cell_kw = dict(
+                multi_pod=mp, tiny=args.tiny, mesh_spec=mesh_spec,
+                exec_overrides=dict(overrides), microbatches=args.microbatches,
+                fsdp=not args.no_fsdp, sp=args.sp, probes=not args.no_probes,
+            )
             try:
-                r = run_cell(
-                    arch, shape, multi_pod=mp, tiny=args.tiny, mesh_spec=mesh_spec,
-                    exec_overrides=overrides, microbatches=args.microbatches,
-                    fsdp=not args.no_fsdp, sp=args.sp, probes=not args.no_probes,
-                )
+                if tuned_db is not None:
+                    point = _tuned_point(tuned_db, arch, shape, mesh_spec)
+                    if point is None:
+                        r = run_cell(arch, shape, **cell_kw)
+                        r["launch_tuned"] = False
+                    else:
+                        from repro.launch.spaces import apply_launch_point
+
+                        n = (point["dp"] * point["tp"])
+                        tuned_kw = dict(cell_kw)
+                        tuned_kw.update(apply_launch_point(
+                            point, n, jax.default_backend()
+                        ))
+                        tuned_kw["exec_overrides"] = dict(
+                            overrides, **tuned_kw.pop("exec_overrides", {})
+                        )
+                        r = run_cell(arch, shape, **tuned_kw)
+                        base = run_cell(arch, shape, **dict(cell_kw, verbose=False))
+                        r["launch_tuned"] = True
+                        r["launch_point"] = dict(point)
+                        r["step_bound_s"] = _bound(r)
+                        r["default_step_bound_s"] = _bound(base)
+                        if r["status"] == "ok" and base["status"] == "ok":
+                            print(
+                                f"[dryrun --tune] {arch} × {shape}: tuned "
+                                f"{r['step_bound_s']*1e3:.2f} ms vs default "
+                                f"{r['default_step_bound_s']*1e3:.2f} ms per step"
+                            )
+                else:
+                    r = run_cell(arch, shape, **cell_kw)
             except Exception as e:
                 traceback.print_exc()
                 r = {"arch": arch, "shape": shape, "multi_pod": mp,

@@ -30,7 +30,13 @@ from jax.sharding import PartitionSpec as P
 
 from ._compat import shard_map
 
-__all__ = ["int8_psum", "topk_psum", "make_compressed_dp_step", "wire_bytes"]
+__all__ = [
+    "int8_psum",
+    "topk_psum",
+    "chunked_psum",
+    "make_compressed_dp_step",
+    "wire_bytes",
+]
 
 
 def int8_psum(g: jnp.ndarray, axis: str) -> jnp.ndarray:
@@ -59,6 +65,30 @@ def topk_psum(g: jnp.ndarray, axis: str, k_ratio: float, err: jnp.ndarray):
     return jax.lax.psum(sparse, axis), new_err
 
 
+def chunked_psum(g: jnp.ndarray, axis: str, chunk_bytes: int) -> jnp.ndarray:
+    """All-reduce ``g`` in fixed-size chunks of ≤ ``chunk_bytes`` each.
+
+    Collective chunking is a launch-level knob (``launch.spaces``): smaller
+    chunks let an async scheduler overlap the reduction with compute and
+    bound the per-op ICI buffer, at the price of per-chunk dispatch latency;
+    one huge all-reduce is the opposite trade.  The reduction is exact — the
+    result equals ``jax.lax.psum(g, axis)`` bit-for-bit in fp32 — only the
+    op granularity changes (one psum per chunk via ``lax.map``)."""
+    if chunk_bytes <= 0:
+        raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
+    per = max(1, int(chunk_bytes) // g.dtype.itemsize)
+    flat = g.reshape(-1)
+    if flat.size <= per:
+        return jax.lax.psum(g, axis)
+    n_chunks = -(-flat.size // per)
+    pad = n_chunks * per - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n_chunks, per)
+    reduced = jax.lax.map(lambda c: jax.lax.psum(c, axis), chunks)
+    return reduced.reshape(-1)[: g.size].reshape(g.shape)
+
+
 def wire_bytes(tree, method: str, k_ratio: float = 0.01) -> int:
     """Wire-cost model per DP all-reduce (ring: 2(n-1)/n ≈ 2x size)."""
     n = sum(x.size for x in jax.tree.leaves(tree))
@@ -83,6 +113,7 @@ def make_compressed_dp_step(
     axis: str = "data",
     method: str = "int8",
     k_ratio: float = 0.01,
+    chunk_bytes: int = 0,
 ):
     """Explicit-DP train step: per-device grads on the local microbatch, then
     a compressed cross-device reduction.  Params replicated over ``axis``.
@@ -105,6 +136,11 @@ def make_compressed_dp_step(
             )
             grads = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
             new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        elif method == "chunked":
+            grads = jax.tree.map(
+                lambda g: chunked_psum(g / nd, axis, chunk_bytes or g.nbytes), grads
+            )
+            new_err = err
         else:  # exact
             grads = jax.tree.map(lambda g: jax.lax.psum(g / nd, axis), grads)
             new_err = err

@@ -33,6 +33,7 @@ One front door for every offline tuning workflow::
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -100,6 +101,23 @@ def _db_merge(argv) -> int:
     return 0
 
 
+def _key_context(key) -> str:
+    """Human-readable context column for a record's key.  Kernel keys render
+    their argument shapes; launch-level keys have no array arguments
+    (``shapes()`` is None) — their context lives in ``extra`` (shape name,
+    device count, mode), so render that instead of the literal "None"."""
+    shapes = key.shapes()
+    if shapes is not None:
+        return str(shapes)
+    try:
+        extra = json.loads(getattr(key, "extra", None) or "{}")
+    except (TypeError, ValueError):
+        extra = {}
+    if extra:
+        return "[" + " ".join(f"{k}={extra[k]}" for k in sorted(extra)) + "]"
+    return "[no-args]"
+
+
 # ------------------------------------------------------------------- db list
 def _db_list(argv) -> int:
     ap = argparse.ArgumentParser(
@@ -146,12 +164,12 @@ def _db_list(argv) -> int:
     where = f" shard {shard[0]}/{shard[1]}" if shard is not None else ""
     print(f"{args.db}: {len(records)} records{where}")
     for rec in sorted(records, key=lambda r: r.key.encode()):
-        shapes = rec.key.shapes()
+        shapes = _key_context(rec.key)
         conf = (f" ±{rec.cost_std * 1e3:.2f}ms(n={rec.repeats_spent})"
                 if rec.known_std() is not None else "")
         strat = f" strategy={rec.strategy}" if rec.strategy else ""
         print(
-            f"  {rec.key.name:<18} {str(shapes):<34} best={rec.point} "
+            f"  {rec.key.name:<18} {shapes:<34} best={rec.point} "
             f"cost={rec.cost * 1e3:.3f}ms{conf} source={rec.source}{strat}"
         )
     return 0
@@ -185,17 +203,17 @@ def _db_diff(argv) -> int:
         if ra is None or rb is None:
             side = args.b if ra is None else args.a
             rec = rb if ra is None else ra
-            print(f"  only in {side}: {rec.key.name} {rec.key.shapes()}")
+            print(f"  only in {side}: {rec.key.name} {_key_context(rec.key)}")
             bad += 1
         elif ra.point != rb.point:
             print(
-                f"  point mismatch: {ra.key.name} {ra.key.shapes()}: "
+                f"  point mismatch: {ra.key.name} {_key_context(ra.key)}: "
                 f"{ra.point} (cost={ra.cost:.6g}) != {rb.point} (cost={rb.cost:.6g})"
             )
             bad += 1
         elif args.costs and ra.cost != rb.cost:
             print(
-                f"  cost mismatch: {ra.key.name} {ra.key.shapes()}: "
+                f"  cost mismatch: {ra.key.name} {_key_context(ra.key)}: "
                 f"{ra.cost:.6g} != {rb.cost:.6g}"
             )
             bad += 1

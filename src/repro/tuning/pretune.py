@@ -210,8 +210,20 @@ def _selected(cases, wanted, only):
     return out
 
 
+def _space_size_str(space) -> str:
+    """`size=raw/feasible` — the resolved product-space size and what is left
+    after the validity predicates prune (equal when unconstrained), so
+    operators can see whether a sweep is tractable before launching it."""
+    raw = space.size()
+    if raw is None:
+        return "size=∞"
+    feas = space.constrained_size()
+    return f"size={raw}/{feas if feas is not None else '?'}"
+
+
 def _list_grid(cases, db, interpret: bool) -> int:
-    """Print each case with its DB status: exact hit, warm neighbor, or cold."""
+    """Print each case with its resolved space size (raw/constrained) and DB
+    status: exact hit, warm neighbor, or cold."""
     from repro.kernels.autotuned import get_spec
     from repro.tuning import make_key
 
@@ -223,6 +235,7 @@ def _list_grid(cases, db, interpret: bool) -> int:
                        extra={"interpret": bool(interpret)})
         rec, exact = db.lookup(key)
         case_id = f"{name}/{label}"
+        case_id = f"{case_id:<28} {_space_size_str(space):<14}"
         if exact:
             # same convention as the run summary: the default CSA search is
             # not news, only a non-default strategy earns the column
@@ -236,6 +249,139 @@ def _list_grid(cases, db, interpret: bool) -> int:
         else:
             print(f"  {case_id:<42} cold")
     return 0
+
+
+def _launch_main(args, db, *, max_iter: int) -> int:
+    """The ``--launch`` family: sweep launch-level (arch, shape) contexts
+    through :func:`repro.launch.spaces.tune_launch` with the same journal /
+    shard / list / resume machinery as the kernel grid."""
+    import os
+
+    from repro import configs, obs
+    from repro.launch.spaces import (
+        launch_cases,
+        launch_key,
+        launch_space,
+        tune_launch,
+    )
+    from repro.tuning import RunJournal
+
+    n_devices = args.devices or int(os.environ.get("REPRO_DRYRUN_DEVICES") or 8)
+    mode = "model" if args.cost == "analytic" else "dryrun"
+    cases = launch_cases(smoke=args.smoke)
+    if args.only:
+        cases = [
+            (a, s) for a, s in cases
+            if any(fnmatch.fnmatch(f"launch/{a}/{s}", pat)
+                   or fnmatch.fnmatch(a, pat) for pat in args.only)
+        ]
+    if not cases:
+        print("pretune: no launch cases match the given filters", file=sys.stderr)
+        return 2
+
+    def case_key(arch, shape_name):
+        cfg = configs.get(arch)
+        shape = configs.SHAPES[shape_name]
+        space = launch_space(cfg, shape, n_devices)
+        return launch_key(arch, shape, n_devices, space, mode=mode), space
+
+    if args.shard is not None:
+        from repro.tuning.fleet import in_shard, parse_shard
+
+        index, num = parse_shard(args.shard)
+        total = len(cases)
+        cases = [
+            (a, s) for a, s in cases if in_shard(case_key(a, s)[0], index, num)
+        ]
+        print(f"pretune: shard {index}/{num}: {len(cases)}/{total} launch cases")
+        if not cases:
+            db.save()
+            return 0
+
+    if args.list_grid:
+        for arch, shape_name in cases:
+            key, space = case_key(arch, shape_name)
+            rec, exact = db.lookup(key)
+            case_id = f"launch/{arch}/{shape_name}"
+            case_id = f"{case_id:<40} {_space_size_str(space):<16}"
+            if exact:
+                print(f"  {case_id} HIT   best={rec.point} cost={rec.cost:.4g}s "
+                      f"source={rec.source}")
+            else:
+                print(f"  {case_id} cold  devices={n_devices} mode={mode}")
+        return 0
+
+    jpath = RunJournal.path_for(args.db)
+    done_keys: set = set()
+    if args.resume:
+        journal = RunJournal(jpath)
+        s = journal.summary()
+        done_keys = set(s["committed"]) | set(s["failed"])
+        if s["committed"]:
+            db.merge(journal.to_db())
+        journal.resume()
+        print(f"pretune: resume from {jpath}: skipping {len(done_keys)} "
+              f"completed launch cases")
+    else:
+        if os.path.exists(jpath):
+            os.remove(jpath)
+        journal = RunJournal(jpath)
+
+    n_done = 0
+    t_all = time.perf_counter()
+    totals = {"measured": 0, "pruned": 0}
+    sweep_span = obs.span("pretune", cases=len(cases), family="launch")
+    sweep_span.__enter__()
+    try:
+        for arch, shape_name in cases:
+            key, space = case_key(arch, shape_name)
+            if key.encode() in done_keys:
+                continue
+            t0 = time.perf_counter()
+            stats: dict = {}
+            journal.start(key)
+            rec = tune_launch(
+                arch,
+                shape_name,
+                n_devices,
+                db=db,
+                mode=mode,
+                num_opt=args.num_opt,
+                max_iter=max_iter,
+                seed=args.seed,
+                search=args.strategy,
+                warm_start=not args.no_warm_start,
+                source="pretune",
+                stats=stats,
+            )
+            dt = time.perf_counter() - t0
+            totals["measured"] += int(stats.get("measured", 0))
+            totals["pruned"] += int(stats.get("pruned", 0))
+            if rec is None:
+                journal.failed(key, "every candidate failed")
+                print(f"  launch/{arch}/{shape_name}: every candidate failed; "
+                      f"nothing stored ({dt:.1f}s)", file=sys.stderr)
+                continue
+            journal.commit(key, rec)
+            sz = _space_size_str(space)
+            replay = " (replayed)" if stats.get("replayed") else ""
+            print(
+                f"  launch/{arch}/{shape_name}: best={rec.point} "
+                f"cost={rec.cost:.4g}s {sz} measured={stats.get('measured', 0)} "
+                f"pruned={stats.get('pruned', 0)}{replay} ({dt:.1f}s)"
+            )
+            n_done += 1
+        db.save()
+        print(
+            f"pretune: {n_done} launch contexts tuned, {len(db)} records in "
+            f"{args.db} ({time.perf_counter() - t_all:.1f}s); "
+            f"{totals['measured']} candidates scored ({mode}), "
+            f"{totals['pruned']} constraint-pruned at zero cost"
+        )
+        return 0
+    finally:
+        sweep_span.__exit__(None, None, None)
+        obs.shutdown()
 
 
 def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
@@ -313,6 +459,21 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
              "cases already committed or failed are skipped, only "
              "interrupted and never-started cases are (re-)measured",
     )
+    ap.add_argument(
+        "--launch", action="store_true",
+        help="tune the launch-level grid (launch.spaces: mesh dp×tp "
+             "factorization, microbatches, remat, collective chunking, XLA "
+             "preset) instead of kernel tiles.  '--cost analytic' (the CI "
+             "mode) scores candidates with the deterministic launch cost "
+             "model; '--cost runtime' compiles each candidate on the "
+             "host-platform mesh via launch.dryrun and charges its roofline "
+             "bound",
+    )
+    ap.add_argument(
+        "--devices", type=int, default=None,
+        help="device count the launch grid factorizes (with --launch; "
+             "default: REPRO_DRYRUN_DEVICES, else 8)",
+    )
     args = ap.parse_args(argv)
 
     from repro import obs
@@ -328,6 +489,9 @@ def main(argv=None, prog: str = "repro.tuning.pretune") -> int:
     db = TuningDB(args.db)
     backend, device_kind = default_device()
     print(f"pretune: db={args.db} ({len(db)} records) device={backend}/{device_kind}")
+
+    if args.launch:
+        return _launch_main(args, db, max_iter=max_iter)
 
     wanted = set(args.kernel) if args.kernel else None
     unknown = (wanted or set()) - set(registered())

@@ -46,6 +46,11 @@ def space_fingerprint(space) -> str:
     for d in space.dims:
         fields = {f.name: getattr(d, f.name) for f in dataclasses.fields(d)}
         spec.append({"kind": type(d).__name__, **fields})
+    # validity predicates shrink the feasible region, so they are part of the
+    # context; constraint-free spaces hash exactly as before (stored kernel
+    # keys stay valid)
+    if getattr(space, "constraints", ()):
+        spec.append({"kind": "constraints", "names": [c.name for c in space.constraints]})
     blob = json.dumps(spec, sort_keys=True, default=repr, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
